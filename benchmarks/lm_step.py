@@ -1,0 +1,67 @@
+"""Reduced-config LM step timings on CPU: train / prefill / decode per arch
+family — the substrate-level benchmark (one row per model family)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_arch, reduced
+from repro.core.engine import make_engine
+from repro.models import transformer as tfm
+from repro.serve import kvcache
+from repro.serve.serve_step import make_decode_step
+from repro.train import optimizer as opt
+from repro.train.train_step import make_train_step
+
+ARCHS = ["qwen2-0.5b", "deepseek-v2-lite-16b", "mamba2-1.3b", "zamba2-7b",
+         "hubert-xlarge"]
+
+
+def _time(fn, reps=3):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    eng = make_engine("xla", "fp32_strict")
+    for arch in ARCHS:
+        cfg = reduced(get_arch(arch))
+        params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+        B, S = 2, 64
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        batch = {"labels": jax.random.randint(ks[2], (B, S), 0,
+                                              cfg.vocab_size)}
+        if cfg.frontend == "audio":
+            batch["frames"] = jax.random.normal(ks[0],
+                                                (B, S, cfg.frontend_dim))
+        else:
+            n_text = S - (cfg.frontend_tokens
+                          if cfg.frontend == "vision" else 0)
+            batch["tokens"] = jax.random.randint(ks[0], (B, n_text), 0,
+                                                 cfg.vocab_size)
+            if cfg.frontend == "vision":
+                batch["patch_embeds"] = jax.random.normal(
+                    ks[1], (B, cfg.frontend_tokens, cfg.frontend_dim))
+        ocfg = opt.AdamWConfig()
+        step = jax.jit(make_train_step(eng, cfg, ocfg, ce_chunk=32,
+                                       n_q_chunks=4))
+        st = opt.adamw_init(params)
+        t = _time(lambda: jax.block_until_ready(
+            step(params, st, batch)[2]["loss"]))
+        rows.append((f"lm_step/{arch}/train", t * 1e6, f"B={B} S={S}"))
+
+        if not cfg.is_encoder:
+            caches = kvcache.cache_init(cfg, B, S)
+            dec = jax.jit(make_decode_step(eng, cfg))
+            tok = jnp.zeros((B, 1), jnp.int32)
+            pos = jnp.array(0, jnp.int32)
+            t = _time(lambda: jax.block_until_ready(
+                dec(params, caches, tok, pos)[0]))
+            rows.append((f"lm_step/{arch}/decode", t * 1e6, f"B={B}"))
+    return rows

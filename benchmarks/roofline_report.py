@@ -1,0 +1,80 @@
+"""§Roofline deliverable: per (arch × shape × mesh) table from the dry-run
+JSON records (results/dryrun/*.json)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+COLS = ("arch", "shape", "mesh", "dom", "t_comp", "t_mem", "t_coll",
+        "useful", "mfu_bound", "fits")
+
+
+def load_records(out_dir: str = "results/dryrun") -> list[dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fits_hbm(rec: dict) -> str:
+    ma = rec.get("memory_analysis", {})
+    if "error" in ma or not ma:
+        return "?"
+    # arguments are sharded resident state (params+opt+cache); temp is
+    # transient.  Both must fit in 16 GB per chip.
+    args = ma.get("argument_size_in_bytes", 0)
+    temp = ma.get("temp_size_in_bytes", 0)
+    return "yes" if (args + temp) < 16e9 else f"NO({(args+temp)/1e9:.0f}G)"
+
+
+def rows(out_dir: str = "results/dryrun", tag: str | None = None):
+    out = []
+    for rec in load_records(out_dir):
+        if rec.get("status") == "skipped":
+            out.append((rec["arch"], rec["shape"], rec.get("mesh", "?"),
+                        "SKIP", "-", "-", "-", "-", "-",
+                        rec.get("reason", "")[:40]))
+            continue
+        if rec.get("status") != "ok":
+            out.append((rec["arch"], rec["shape"], rec.get("mesh", "?"),
+                        "ERROR", "-", "-", "-", "-", "-",
+                        rec.get("error", "")[:40]))
+            continue
+        r = rec["roofline"]
+        out.append((rec["arch"], rec["shape"], rec["mesh"],
+                    r["dominant"][:4],
+                    f"{r['t_compute_s']:.4f}",
+                    f"{r['t_memory_s']:.4f}",
+                    f"{r['t_collective_s']:.4f}",
+                    f"{r['useful_ratio']:.2f}",
+                    f"{r['mfu_bound']:.3f}",
+                    fits_hbm(rec)))
+    return out
+
+
+def run() -> list[tuple[str, float, str]]:
+    table = rows()
+    out = []
+    for r in table:
+        name = f"roofline/{r[0]}/{r[1]}/{r[2]}"
+        derived = (f"dom={r[3]} t=({r[4]},{r[5]},{r[6]}) useful={r[7]} "
+                   f"mfu_bound={r[8]} fits={r[9]}")
+        out.append((name, 0.0, derived))
+    if not out:
+        out.append(("roofline/none", 0.0, "run repro.launch.dryrun first"))
+    return out
+
+
+def print_markdown(out_dir: str = "results/dryrun"):
+    hdr = "| " + " | ".join(COLS) + " |"
+    sep = "|" + "---|" * len(COLS)
+    print(hdr)
+    print(sep)
+    for r in rows(out_dir):
+        print("| " + " | ".join(str(x) for x in r) + " |")
+
+
+if __name__ == "__main__":
+    print_markdown()

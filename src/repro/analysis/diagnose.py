@@ -1,0 +1,114 @@
+"""Per-cell bottleneck attribution: recompile one cell and break the
+dominant roofline term down by HLO op (with JAX source metadata and
+while-trip multipliers).  The §Perf loop's 'profiler'.
+
+    PYTHONPATH=src python -m repro.analysis.diagnose --arch X --shape Y
+"""
+from __future__ import annotations
+
+import re
+
+from repro.analysis import hlo_cost
+
+
+def attribute(text: str, top: int = 20) -> dict:
+    """Returns {'collectives': [(bytes, kind, trips, op_name_meta)],
+                'traffic':     [(bytes, opcode, trips, op_name_meta)]}."""
+    a = hlo_cost.Analyzer(text)
+    a.totals()
+    coll_rows, mem_rows = [], []
+
+    def walk(comp_name: str, mult: float):
+        comp = a.comps.get(comp_name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            oc = op.opcode[:-6] if op.opcode.endswith("-start") else op.opcode
+            if oc in hlo_cost._FREE_OPS or op.opcode.endswith("-done"):
+                continue
+            meta = re.search(r'op_name="([^"]*)"', op.rest)
+            label = meta.group(1) if meta else op.name
+            if oc == "while":
+                body = hlo_cost._CALL_ATTR.search(op.rest)
+                cond = hlo_cost._COND_ATTR.search(op.rest)
+                trips = (hlo_cost._trip_count(a.comps, cond.group(1))
+                         if cond else 1)
+                if body:
+                    walk(body.group(1), mult * trips)
+                continue
+            if oc == "call":
+                cal = hlo_cost._CALL_ATTR.search(op.rest)
+                if cal:
+                    walk(cal.group(1), mult)
+                continue
+            if oc in hlo_cost._COLLECTIVES:
+                size = hlo_cost._nbytes(op.shapes) * mult
+                coll_rows.append((size, oc, mult, label))
+            if oc == "fusion":
+                cal = hlo_cost._CALL_ATTR.search(op.rest)
+                called = a.comps.get(cal.group(1)) if cal else None
+                b = (hlo_cost._fusion_traffic(op, comp, called)
+                     if called else 0)
+            else:
+                b = hlo_cost._op_traffic(op, comp)
+            mem_rows.append((b * mult, oc, mult, label))
+
+    walk("__entry__", 1.0)
+    coll_rows.sort(reverse=True)
+    mem_rows.sort(reverse=True)
+    return {"collectives": coll_rows[:top], "traffic": mem_rows[:top],
+            "totals": a.totals()}
+
+
+def print_report(text: str, top: int = 15):
+    rep = attribute(text, top)
+    t = rep["totals"]
+    print(f"flops={t['flops']:.3e}  bytes={t['bytes']:.3e}  "
+          f"coll={t['collectives']['total']:.3e}")
+    print(f"\n-- top collectives (bytes x trips) --")
+    for size, kind, mult, label in rep["collectives"]:
+        print(f"{size:12.3e} {kind:20s} x{int(mult):<5d} {label[:100]}")
+    print(f"\n-- top memory traffic --")
+    for size, kind, mult, label in rep["traffic"]:
+        print(f"{size:12.3e} {kind:20s} x{int(mult):<5d} {label[:100]}")
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--policy", default="fp32_strict")
+    ap.add_argument("--strategy", default=None)
+    ap.add_argument("--moe-dispatch", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--n-q-chunks", type=int, default=None)
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--save-hlo", default="")
+    args = ap.parse_args(argv)
+    # local import so this module stays usable without the 512-device flag
+    from repro.launch import dryrun
+
+    rec, text = dryrun.lower_cell(
+        args.arch, args.shape, policy_name=args.policy,
+        num_microbatches=args.microbatches, strategy=args.strategy,
+        moe_dispatch=args.moe_dispatch, n_q_chunks=args.n_q_chunks,
+        return_text=True)
+    if args.save_hlo:
+        with open(args.save_hlo, "w") as f:
+            f.write(text)
+    print(f"cell: {args.arch} x {args.shape} "
+          f"(policy={args.policy}, strategy={rec.get('strategy')})")
+    r = rec.get("roofline", {})
+    if r:
+        print(f"t_comp={r['t_compute_s']:.3f} t_mem={r['t_memory_s']:.3f} "
+              f"t_coll={r['t_collective_s']:.3f} dom={r['dominant']} "
+              f"useful={r['useful_ratio']:.2f}")
+    print_report(text, args.top)
+
+
+if __name__ == "__main__":
+    import os
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
+    main()

@@ -1,0 +1,186 @@
+"""Three-term roofline from a compiled SPMD artifact (no hardware needed).
+
+Terms per (arch × shape × mesh), all in seconds-per-step on TPU v5e:
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOPs(dtype)
+    memory     = HLO_bytes_per_chip / HBM_BW
+    collective = Σ_op bytes_through_links_per_chip / LINK_BW
+
+Conventions (calibrated in tests/test_roofline.py):
+  * ``compiled.cost_analysis()`` on a partitioned module reports the
+    PER-DEVICE program (SPMD): flops/bytes are per chip already.
+  * ``compiled.as_text()`` is the partitioned module; collective result
+    shapes are per-device buffers.  Link traffic model per chip:
+      all-reduce          2 × buffer          (ring: reduce-scatter+gather)
+      all-gather          1 × result          (result = gathered buffer)
+      reduce-scatter      group_size × result (result = 1/n shard)
+      all-to-all          1 × buffer
+      collective-permute  1 × buffer
+  * fp32_strict runs the MXU at half rate (documented assumption:
+    fp32 ≈ ½ bf16 on v5e-class MXUs).
+
+Hardware constants per the harness: 197 TFLOP/s bf16; 819 GB/s HBM;
+50 GB/s/link ICI; 16 GB HBM per chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+HW = {
+    "peak_bf16": 197e12,
+    "peak_fp32": 98.5e12,
+    "hbm_bw": 819e9,
+    "link_bw": 50e9,
+    "hbm_bytes": 16e9,
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", )
+_TUPLE_ELT_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-chip link-traffic bytes by collective kind, from partitioned HLO.
+
+    Skips ``*-done`` ops (the matching ``*-start`` carries the shape) and
+    dedups fusion-internal repeats conservatively by counting every match.
+    """
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    for m in _COLL_RE.finditer(hlo_text):
+        tuple_body, dtype, dims, kind = m.groups()
+        if tuple_body is not None:
+            size = sum(_shape_bytes(dt, dm) for dt, dm in
+                       _TUPLE_ELT_RE.findall(tuple_body))
+        else:
+            size = _shape_bytes(dtype, dims)
+        # factor
+        line_end = hlo_text.find("\n", m.end())
+        line = hlo_text[m.end():line_end if line_end > 0 else m.end() + 400]
+        if kind == "all-reduce":
+            size *= 2
+        elif kind == "reduce-scatter":
+            g = _GROUPS_RE.search(line)
+            if g:
+                size *= int(g.group(2))
+            else:
+                gb = _GROUPS_BRACE_RE.search(line)
+                if gb:
+                    size *= len(gb.group(1).split(","))
+        out[kind] += size
+    out["total"] = sum(out.values())
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    dtype: str                      # "fp32" | "bf16"
+    chips: int
+    model_flops: float              # 6·N·D or 2·N_active·D (+KV attention)
+
+    @property
+    def t_compute(self) -> float:
+        peak = HW["peak_fp32"] if self.dtype == "fp32" else HW["peak_bf16"]
+        return self.flops_per_chip / peak
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HW["hbm_bw"]
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / HW["link_bw"]
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / total compiled FLOPs — remat/padding/capacity waste."""
+        total = self.flops_per_chip * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Best-case MFU if the step runs exactly at the dominant term."""
+        peak = HW["peak_fp32"] if self.dtype == "fp32" else HW["peak_bf16"]
+        t = self.t_bound
+        if t == 0:
+            return 0.0
+        return self.model_flops / (t * self.chips * peak)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+            "mfu_bound": self.mfu_bound,
+            "model_flops": self.model_flops,
+            "chips": self.chips,
+            "dtype": self.dtype,
+        }
+
+
+def model_flops_for(cfg, shape, total_params: int, active_params: int
+                    ) -> float:
+    """MODEL_FLOPS for the cell: 6·N·D train, 2·N_active·D decode/prefill,
+    plus causal attention KV FLOPs where the arch has attention."""
+    D_tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                     else 1)
+    n = active_params
+    base = (6 if shape.kind == "train" else 2) * n * D_tokens
+    # attention flops: 2·2·B·S·ctx·(H·hd + KV... ) — count QK^T + PV over
+    # q heads: 4 * B * S * ctx_avg * H * hd  (x3 for train fwd+bwd)
+    if cfg.n_heads:
+        H, hd = cfg.n_heads, (cfg.head_dim if not cfg.is_mla
+                              else cfg.qk_nope_dim + cfg.qk_rope_dim)
+        n_attn_layers = (cfg.n_layers if cfg.family != "hybrid"
+                         else cfg.n_layers // cfg.attn_every)
+        if shape.kind == "decode":
+            ctx = shape.seq_len
+            attn = 4 * shape.global_batch * 1 * ctx * H * hd * n_attn_layers
+        else:
+            ctx = shape.seq_len / 2 if cfg.causal else shape.seq_len
+            attn = (4 * shape.global_batch * shape.seq_len * ctx * H * hd
+                    * n_attn_layers)
+            if shape.kind == "train":
+                attn *= 3
+        base += attn
+    return float(base)

@@ -1,0 +1,221 @@
+"""Architecture + shape configuration system.
+
+Every assigned architecture is a frozen ``ArchConfig`` (hashable → usable as
+a static jit argument).  ``reduced()`` produces the small same-family config
+used by CPU smoke tests; the full configs are only ever lowered via
+ShapeDtypeStructs in the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # attention flavour
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    causal: bool = True            # False => encoder-only (no decode)
+    norm: str = "rms"              # "rms" | "layer"
+    act: str = "silu"              # MLP activation (silu => SwiGLU, gelu => plain)
+    # MoE
+    n_routed_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    first_dense_layers: int = 0
+    capacity_factor: float = 1.25
+    moe_dispatch: str = "ep_scatter"   # "ep_scatter" | "local"  (§Perf)
+    # MLA (DeepSeek)
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    # SSM (Mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_ngroups: int = 1
+    ssm_chunk: int = 256
+    # hybrid (Zamba2): ONE shared attention+MLP block every `attn_every`
+    # mamba layers (weights reused at every invocation)
+    attn_every: int = 0
+    # modality frontend: "none" | "vision" | "audio" (stubs per harness)
+    frontend: str = "none"
+    frontend_dim: int = 0          # dim of precomputed patch/frame embeddings
+    frontend_tokens: int = 0       # number of patch tokens (vision)
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+
+    # ------------------------------------------------------------ derived
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded up to a multiple of 16 so the vocab dim can be
+        sharded over the 16-way model axis at jit boundaries."""
+        return (self.vocab_size + 15) // 16 * 16
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_routed_experts > 0
+
+    @property
+    def is_ssm(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def is_encoder(self) -> bool:
+        return not self.causal
+
+    @property
+    def is_mla(self) -> bool:
+        return self.kv_lora_rank > 0
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.ssm_d_inner // self.ssm_headdim
+
+    def attn_block_positions(self) -> list[int]:
+        """Hybrid: mamba-layer indices after which the shared block runs."""
+        if not self.attn_every:
+            return []
+        return list(range(self.attn_every - 1, self.n_layers,
+                          self.attn_every))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+ARCH_IDS = [
+    "internvl2-2b", "mamba2-1.3b", "phi3-medium-14b", "qwen2-1.5b",
+    "qwen2.5-3b", "qwen2-0.5b", "hubert-xlarge", "deepseek-v2-lite-16b",
+    "llama4-scout-17b-a16e", "zamba2-7b",
+]
+
+_MODULES = {
+    "internvl2-2b": "internvl2_2b",
+    "mamba2-1.3b": "mamba2_1p3b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "qwen2-1.5b": "qwen2_1p5b",
+    "qwen2.5-3b": "qwen2p5_3b",
+    "qwen2-0.5b": "qwen2_0p5b",
+    "hubert-xlarge": "hubert_xlarge",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b",
+    "zamba2-7b": "zamba2_7b",
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def cell_supported(arch: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Harness skip rules (documented in DESIGN.md §Arch-applicability)."""
+    if shape.kind == "decode" and arch.is_encoder:
+        return False, "encoder-only arch has no decode step"
+    if shape.name == "long_500k" and not arch.is_ssm:
+        return False, ("long_500k needs sub-quadratic attention; "
+                       f"{arch.name} is pure full-attention")
+    return True, ""
+
+
+def reduced(cfg: ArchConfig) -> ArchConfig:
+    """Small same-family config for CPU smoke tests."""
+    kw = dict(
+        name=cfg.name + "-reduced",
+        n_layers=min(cfg.n_layers, 2 if not cfg.attn_every else 4),
+        d_model=128,
+        n_heads=4, n_kv_heads=min(cfg.n_kv_heads, 2) or 2, head_dim=32,
+        d_ff=256, vocab_size=512,
+    )
+    if cfg.is_moe:
+        kw.update(n_routed_experts=4, top_k=min(cfg.top_k, 2),
+                  moe_d_ff=128,
+                  n_shared_experts=min(cfg.n_shared_experts, 1),
+                  first_dense_layers=min(cfg.first_dense_layers, 1))
+    if cfg.is_mla:
+        kw.update(kv_lora_rank=32, qk_nope_dim=32, qk_rope_dim=16,
+                  v_head_dim=32)
+    if cfg.is_ssm:
+        kw.update(ssm_state=16, ssm_headdim=32, ssm_chunk=32)
+    if cfg.attn_every:
+        kw.update(attn_every=2)
+    if cfg.frontend != "none":
+        kw.update(frontend_dim=64,
+                  frontend_tokens=min(cfg.frontend_tokens, 8) or 0)
+    if cfg.n_kv_heads == cfg.n_heads:  # MHA archs stay MHA
+        kw.update(n_kv_heads=4)
+    return dataclasses.replace(cfg, **kw)
+
+
+# ----------------------------------------------------------- input specs ---
+
+def input_specs(arch: ArchConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Training: {tokens, labels} (+frontend embeds).  Prefill: {tokens}.
+    Decode: {token (B,1), pos scalar} — the KV cache is part of the
+    serve_step signature and is spec'd by serve.kvcache.cache_specs().
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    specs: dict = {}
+    if shape.kind == "train":
+        n_text = S - (arch.frontend_tokens if arch.frontend == "vision" else 0)
+        if arch.frontend == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct((B, S, arch.frontend_dim),
+                                                   jnp.float32)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((B, n_text), i32)
+        if arch.frontend == "vision":
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, arch.frontend_tokens, arch.frontend_dim), jnp.float32)
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    elif shape.kind == "prefill":
+        n_text = S - (arch.frontend_tokens if arch.frontend == "vision" else 0)
+        if arch.frontend == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct((B, S, arch.frontend_dim),
+                                                   jnp.float32)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((B, n_text), i32)
+        if arch.frontend == "vision":
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, arch.frontend_tokens, arch.frontend_dim), jnp.float32)
+    else:  # decode
+        specs["token"] = jax.ShapeDtypeStruct((B, 1), i32)
+        specs["pos"] = jax.ShapeDtypeStruct((), i32)
+    return specs

@@ -1,0 +1,165 @@
+"""Darknet layer library, lowered onto the compute engine.
+
+All tensors are NHWC.  Convolution follows Darknet's canonical decomposition:
+im2col -> GEMM on the engine -> reshape, with batch-norm folded into the
+engine's fused (scale, shift) epilogue so a conv+BN+activation layer is ONE
+engine invocation — the paper's stream-fused pipeline.
+
+Deconvolution (transpose conv) is GEMM + col2im, same engine.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import ComputeEngine
+
+_BN_EPS = 1e-5
+
+
+# ---------------------------------------------------------------- im2col ---
+
+def im2col(x, kh: int, kw: int, stride: int, pad: int):
+    """x: (B, H, W, C) -> patches (B, OH, OW, kh*kw*C)."""
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride), [(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    # conv_general_dilated_patches returns channel-major (C, kh, kw) feature
+    # order; normalize to (kh, kw, C) to match HWIO weight layout.
+    b, oh, ow, _ = patches.shape
+    c = x.shape[-1]
+    patches = patches.reshape(b, oh, ow, c, kh * kw)
+    patches = jnp.swapaxes(patches, -1, -2)  # (..., kh*kw, C)
+    return patches.reshape(b, oh, ow, kh * kw * c)
+
+
+def fold_batchnorm(gamma, beta, mean, var, bias=None):
+    """Returns (scale, shift) for the engine epilogue: y = conv*scale+shift."""
+    scale = gamma / jnp.sqrt(var + _BN_EPS)
+    shift = beta - mean * scale
+    if bias is not None:
+        shift = shift + bias * scale
+    return scale, shift
+
+
+# ----------------------------------------------------------------- layers ---
+
+def conv2d(engine: ComputeEngine, params: dict, x, *, size: int, stride: int,
+           pad: int, act: str, batch_normalize: bool):
+    """Darknet [convolutional]: im2col + ONE fused engine GEMM."""
+    w = params["w"]                       # (kh*kw*Cin, Cout)
+    if batch_normalize:
+        scale, shift = fold_batchnorm(params["gamma"], params["beta"],
+                                      params["mean"], params["var"])
+    else:
+        scale, shift = None, params["b"]
+    b, h, wd, c = x.shape
+    cols = im2col(x, size, size, stride, pad)        # (B, OH, OW, khkwC)
+    oh, ow = cols.shape[1], cols.shape[2]
+    y = engine.matmul(cols.reshape(b * oh * ow, -1), w,
+                      scale=scale, shift=shift, act=act,
+                      out_dtype=x.dtype)
+    return y.reshape(b, oh, ow, -1)
+
+
+def deconv2d(engine: ComputeEngine, params: dict, x, *, size: int,
+             stride: int, pad: int, act: str, batch_normalize: bool):
+    """Darknet [deconvolutional]: engine GEMM + col2im (scatter-add).
+
+    x: (B, H, W, Cin); w: (Cin, kh*kw*Cout).  Output spatial size follows
+    conv_transpose: OH = (H-1)*stride + size - 2*pad.
+    """
+    w = params["w"]
+    b, h, wd, cin = x.shape
+    khkw_cout = w.shape[1]
+    cout = khkw_cout // (size * size)
+    cols = engine.matmul(x.reshape(b * h * wd, cin), w, out_dtype=jnp.float32)
+    cols = cols.reshape(b, h, wd, size, size, cout)
+    oh = (h - 1) * stride + size - 2 * pad
+    ow = (wd - 1) * stride + size - 2 * pad
+    # col2im: scatter-add each kernel tap; static python loop over (kh, kw).
+    out = jnp.zeros((b, oh + 2 * pad, ow + 2 * pad, cout), jnp.float32)
+    for ki in range(size):
+        for kj in range(size):
+            out = out.at[:, ki:ki + h * stride:stride,
+                         kj:kj + wd * stride:stride, :].add(cols[:, :, :, ki, kj, :])
+    out = out[:, pad:pad + oh, pad:pad + ow, :]
+    if batch_normalize:
+        scale, shift = fold_batchnorm(params["gamma"], params["beta"],
+                                      params["mean"], params["var"])
+        out = out * scale + shift
+    elif "b" in params:
+        out = out + params["b"]
+    from repro.kernels.common import apply_act
+    return apply_act(out, act).astype(x.dtype)
+
+
+def maxpool(x, *, size: int, stride: int, pad: int = 0):
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)),
+                    constant_values=-jnp.inf)
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, size, size, 1), (1, stride, stride, 1),
+        "VALID")
+
+
+def avgpool_global(x):
+    return x.mean(axis=(1, 2))  # darknet [avgpool] is global
+
+
+def upsample(x, *, stride: int):
+    b, h, w, c = x.shape
+    return jnp.repeat(jnp.repeat(x, stride, axis=1), stride, axis=2)
+
+
+def shortcut(x, other, *, act: str = "linear"):
+    from repro.kernels.common import apply_act
+    return apply_act(x + other, act)
+
+
+def route(tensors):
+    return jnp.concatenate(tensors, axis=-1)
+
+
+def connected(engine: ComputeEngine, params: dict, x, *, act: str):
+    b = x.shape[0]
+    return engine.matmul(x.reshape(b, -1), params["w"], shift=params["b"],
+                         act=act, out_dtype=x.dtype)
+
+
+def softmax(x):
+    return jax.nn.softmax(x, axis=-1)
+
+
+# ------------------------------------------------------------------- init ---
+
+def init_conv(key, size, cin, cout, batch_normalize, dtype=jnp.float32):
+    fan_in = size * size * cin
+    w = jax.random.normal(key, (size * size * cin, cout), dtype) * np.sqrt(
+        2.0 / fan_in)
+    p = {"w": w}
+    if batch_normalize:
+        p.update(gamma=jnp.ones((cout,), dtype), beta=jnp.zeros((cout,), dtype),
+                 mean=jnp.zeros((cout,), dtype), var=jnp.ones((cout,), dtype))
+    else:
+        p["b"] = jnp.zeros((cout,), dtype)
+    return p
+
+
+def init_deconv(key, size, cin, cout, batch_normalize, dtype=jnp.float32):
+    fan_in = cin
+    w = jax.random.normal(key, (cin, size * size * cout), dtype) * np.sqrt(
+        2.0 / fan_in)
+    p = {"w": w}
+    if batch_normalize:
+        p.update(gamma=jnp.ones((cout,), dtype), beta=jnp.zeros((cout,), dtype),
+                 mean=jnp.zeros((cout,), dtype), var=jnp.ones((cout,), dtype))
+    else:
+        p["b"] = jnp.zeros((cout,), dtype)
+    return p
+
+
+def init_connected(key, nin, nout, dtype=jnp.float32):
+    w = jax.random.normal(key, (nin, nout), dtype) * np.sqrt(2.0 / nin)
+    return {"w": w, "b": jnp.zeros((nout,), dtype)}

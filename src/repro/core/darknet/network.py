@@ -1,0 +1,164 @@
+"""Darknet network builder: cfg sections -> params + jit-able forward.
+
+Mirrors the paper's flow (Fig. 1): parse the Darknet description, map every
+conv/deconv/FC layer onto the compute engine, keep the rest as cheap
+elementwise/pooling glue.  Inference only (the paper's framework is an
+inference accelerator); weights come from init or a checkpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.darknet import cfg as cfg_mod
+from repro.core.darknet import layers as L
+from repro.core.engine import ComputeEngine
+
+
+@dataclasses.dataclass
+class LayerPlan:
+    index: int
+    type: str
+    options: dict[str, Any]
+    out_shape: tuple  # (H, W, C) or (N,)
+
+
+class Network:
+    """Built from a darknet cfg; functional apply(params, x)."""
+
+    def __init__(self, cfg_text: str, engine: ComputeEngine | None = None):
+        self.engine = engine or ComputeEngine()
+        self.sections = cfg_mod.parse_cfg(cfg_text)
+        net = self.sections[0]
+        self.in_shape = (net.get("height"), net.get("width"),
+                         net.get("channels"))
+        self.plans: list[LayerPlan] = []
+        self._plan()
+
+    # ------------------------------------------------------------- planning
+    def _plan(self):
+        h, w, c = self.in_shape
+        shapes: list[tuple] = []
+        for i, s in enumerate(self.sections[1:]):
+            t = s.type
+            if t == "convolutional":
+                size, stride = s.get("size", 3), s.get("stride", 1)
+                pad = s.get("pad", 0) and size // 2 or s.get("padding", 0)
+                f = s.get("filters", 1)
+                h = (h + 2 * pad - size) // stride + 1
+                w = (w + 2 * pad - size) // stride + 1
+                c = f
+            elif t == "deconvolutional":
+                size, stride = s.get("size", 3), s.get("stride", 1)
+                pad = s.get("pad", 0) and size // 2 or s.get("padding", 0)
+                f = s.get("filters", 1)
+                h = (h - 1) * stride + size - 2 * pad
+                w = (w - 1) * stride + size - 2 * pad
+                c = f
+            elif t == "maxpool":
+                size, stride = s.get("size", 2), s.get("stride", 2)
+                pad = s.get("padding", 0)
+                h = (h + pad - size) // stride + 1
+                w = (w + pad - size) // stride + 1
+            elif t == "avgpool":
+                h, w = 1, 1
+            elif t == "upsample":
+                stride = s.get("stride", 2)
+                h, w = h * stride, w * stride
+            elif t == "route":
+                idxs = [j if j >= 0 else len(shapes) + j
+                        for j in s.get("layers")]
+                h, w, _ = shapes[idxs[0]]
+                c = sum(shapes[j][2] for j in idxs)
+            elif t == "shortcut":
+                pass  # same shape
+            elif t == "connected":
+                n = s.get("output")
+                h, w, c = 1, 1, n
+            elif t in ("softmax", "dropout"):
+                pass
+            else:
+                raise ValueError(f"unplanned layer {t}")
+            shapes.append((h, w, c))
+            self.plans.append(LayerPlan(i, t, dict(s.options), (h, w, c)))
+        self.out_shape = shapes[-1]
+
+    # ----------------------------------------------------------------- init
+    def init(self, key) -> dict:
+        params: dict[str, Any] = {}
+        h, w, c = self.in_shape
+        shapes = []
+        cur_c = c
+        cur_hw = (h, w)
+        for p in self.plans:
+            t, o = p.type, p.options
+            if t == "convolutional":
+                key, sub = jax.random.split(key)
+                params[f"l{p.index}"] = L.init_conv(
+                    sub, o.get("size", 3), cur_c, o.get("filters", 1),
+                    o.get("batch_normalize", 0))
+            elif t == "deconvolutional":
+                key, sub = jax.random.split(key)
+                params[f"l{p.index}"] = L.init_deconv(
+                    sub, o.get("size", 3), cur_c, o.get("filters", 1),
+                    o.get("batch_normalize", 0))
+            elif t == "connected":
+                key, sub = jax.random.split(key)
+                nin = cur_hw[0] * cur_hw[1] * cur_c
+                params[f"l{p.index}"] = L.init_connected(sub, nin,
+                                                         o.get("output"))
+            cur_hw, cur_c = p.out_shape[:2], p.out_shape[2]
+            shapes.append(p.out_shape)
+        return params
+
+    # -------------------------------------------------------------- forward
+    def apply(self, params: dict, x):
+        """x: (B, H, W, C) -> network output."""
+        eng = self.engine
+        outputs: list = []
+        for p in self.plans:
+            t, o = p.type, p.options
+            if t == "convolutional":
+                size = o.get("size", 3)
+                pad = o.get("pad", 0) and size // 2 or o.get("padding", 0)
+                x = L.conv2d(eng, params[f"l{p.index}"], x, size=size,
+                             stride=o.get("stride", 1), pad=pad,
+                             act=o.get("activation", "leaky"),
+                             batch_normalize=bool(o.get("batch_normalize", 0)))
+            elif t == "deconvolutional":
+                size = o.get("size", 3)
+                pad = o.get("pad", 0) and size // 2 or o.get("padding", 0)
+                x = L.deconv2d(eng, params[f"l{p.index}"], x, size=size,
+                               stride=o.get("stride", 1), pad=pad,
+                               act=o.get("activation", "leaky"),
+                               batch_normalize=bool(o.get("batch_normalize", 0)))
+            elif t == "maxpool":
+                x = L.maxpool(x, size=o.get("size", 2),
+                              stride=o.get("stride", 2),
+                              pad=o.get("padding", 0))
+            elif t == "avgpool":
+                x = L.avgpool_global(x)
+            elif t == "upsample":
+                x = L.upsample(x, stride=o.get("stride", 2))
+            elif t == "route":
+                idxs = [j if j >= 0 else p.index + j for j in o["layers"]]
+                x = L.route([outputs[j] for j in idxs])
+            elif t == "shortcut":
+                j = o["from"]
+                j = j if j >= 0 else p.index + j
+                x = L.shortcut(x, outputs[j], act=o.get("activation", "linear"))
+            elif t == "connected":
+                x = L.connected(eng, params[f"l{p.index}"], x,
+                                act=o.get("activation", "linear"))
+            elif t == "softmax":
+                x = L.softmax(x)
+            elif t == "dropout":
+                pass  # inference no-op
+            outputs.append(x)
+        return x
+
+    def num_params(self, params) -> int:
+        return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))

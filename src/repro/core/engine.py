@@ -1,0 +1,90 @@
+"""ComputeEngine — the paper's contribution as a composable JAX module.
+
+Every dense computation in this framework (CNN conv layers via im2col, LM
+QKV/O/MLP/MoE projections, SSD intra-chunk matmuls, LM head) routes through
+this engine.  Two backends share identical semantics:
+
+  pallas : the TPU-target kernel (kernels/gemm.py) with explicit VMEM
+           BlockSpec tiling — interpret=True executes it on CPU for tests.
+  xla    : jax.lax.dot_general with the same precision policy and the same
+           fused epilogue, expressed so XLA fuses it into the matmul.  Used
+           where Pallas cannot lower (the 512-host-device dry-run on the CPU
+           backend) and as the A/B reference for §Perf.
+
+The engine is a frozen dataclass → hashable → usable as a static jit arg and
+inside jit'd model code.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import Precision
+from repro.kernels import ops as kernel_ops
+from repro.kernels.common import apply_act
+
+BACKENDS = ("pallas", "xla")
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeEngine:
+    backend: str = "xla"
+    precision: Precision = Precision("fp32_strict")
+    # 0 = auto-pick via kernels.ops.pick_blocks (VMEM-budget heuristic).
+    bm: int = 0
+    bk: int = 0
+    bn: int = 0
+    interpret: bool = True  # CPU container; False on real TPU
+
+    def matmul(self, x, w, *, scale=None, shift=None, act: str = "linear",
+               out_dtype=None):
+        """act((x @ w) * scale + shift) over the last dim of x.
+
+        x: (..., K); w: (K, N); scale/shift: (N,) or None.
+        """
+        *lead, k = x.shape
+        n = w.shape[-1]
+        out_dtype = out_dtype or self.precision.compute_dtype
+        xc = x.astype(self.precision.compute_dtype)
+        wc = w.astype(self.precision.compute_dtype)
+        if self.backend == "pallas":
+            x2 = xc.reshape(-1, k)
+            y = kernel_ops.matmul(x2, wc, scale, shift, act=act,
+                                  out_dtype=out_dtype, bm=self.bm,
+                                  bk=self.bk, bn=self.bn,
+                                  interpret=self.interpret)
+            return y.reshape(*lead, n)
+        # xla backend: same math, fused by XLA.  Emission dtype =
+        # precision.reduce_dtype (see core/precision.py): f32 under
+        # fp32_strict; bf16 under mixed so row-parallel partial-sum
+        # all-reduces ride the wire at half width.
+        rdt = self.precision.reduce_dtype
+        acc = jax.lax.dot_general(
+            xc, wc, (((xc.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=rdt,
+            precision=self.precision.lax_precision)
+        if scale is not None:
+            acc = acc * scale.astype(rdt)
+        if shift is not None:
+            acc = acc + shift.astype(rdt)
+        return apply_act(acc, act).astype(out_dtype)
+
+    def einsum(self, spec: str, x, y, *, out_dtype=None):
+        """Precision-policy einsum for the non-GEMM-shaped contractions
+        (attention scores, SSD chunk terms).  fp32 accumulate always."""
+        out_dtype = out_dtype or self.precision.compute_dtype
+        acc = jnp.einsum(spec, x.astype(self.precision.compute_dtype),
+                         y.astype(self.precision.compute_dtype),
+                         preferred_element_type=jnp.float32,
+                         precision=self.precision.lax_precision)
+        return acc.astype(out_dtype)
+
+
+# Default engines.  Dry-run/bench lowering uses XLA backend (Pallas cannot
+# lower on the CPU backend); kernel tests and the TPU target use pallas.
+def make_engine(backend: str = "xla", policy: str = "fp32_strict",
+                interpret: bool = True, **tiles) -> ComputeEngine:
+    return ComputeEngine(backend=backend, precision=Precision(policy),
+                         interpret=interpret, **tiles)

@@ -1,0 +1,65 @@
+"""Precision policies — the paper's "non-quantized" contract, made explicit.
+
+The paper's position: keep every network parameter at full precision and win
+performance through the engine, not through quantization.  We encode that as
+an invariant (`assert_non_quantized`) plus two compute policies:
+
+  fp32_strict : paper-faithful.  fp32 storage, fp32 MXU compute
+                (Precision.HIGHEST), fp32 accumulate.
+  mixed       : beyond-paper optimization (EXPERIMENTS.md §Perf).  fp32
+                master params, bf16 MXU inputs, fp32 accumulate.  Still
+                "non-quantized" in the paper's sense: no integer/narrow-
+                integer representation anywhere, parameters keep fp32.
+
+Integer dtypes anywhere in a parameter tree are a policy violation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+POLICIES = ("fp32_strict", "mixed")
+
+
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    policy: str = "fp32_strict"
+
+    @property
+    def param_dtype(self):
+        return jnp.float32  # always: non-quantized master params
+
+    @property
+    def compute_dtype(self):
+        return jnp.float32 if self.policy == "fp32_strict" else jnp.bfloat16
+
+    @property
+    def lax_precision(self):
+        return (jax.lax.Precision.HIGHEST if self.policy == "fp32_strict"
+                else jax.lax.Precision.DEFAULT)
+
+    @property
+    def reduce_dtype(self):
+        """Dtype dots EMIT (and therefore the wire dtype of any cross-chip
+        partial-sum all-reduce GSPMD places after them).  fp32_strict keeps
+        f32 end-to-end (paper-faithful).  mixed emits bf16: the MXU still
+        accumulates fp32 internally per-dot (TPU property; the Pallas kernel
+        keeps an explicit f32 VMEM scratch) — only cross-chip partial sums
+        ride bf16, halving collective bytes (EXPERIMENTS.md §Perf it.2)."""
+        return (jnp.float32 if self.policy == "fp32_strict"
+                else jnp.bfloat16)
+
+    def cast_in(self, *xs):
+        out = tuple(x.astype(self.compute_dtype) for x in xs)
+        return out if len(out) > 1 else out[0]
+
+
+def assert_non_quantized(params) -> None:
+    """Raises if any parameter leaf is an integer/quantized dtype."""
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        if jnp.issubdtype(leaf.dtype, jnp.integer):
+            raise ValueError(
+                f"non-quantization policy violated at {jax.tree_util.keystr(path)}: "
+                f"dtype {leaf.dtype}")

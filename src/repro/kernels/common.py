@@ -1,0 +1,49 @@
+"""Shared pieces for the compute-engine kernels.
+
+The paper's HLS engine fuses the activation stage into the streaming GEMM
+pipeline (data leaves the PE array already activated).  We mirror that with a
+fused epilogue applied while the output tile is still in VMEM:
+
+    y = act(acc * scale + shift)
+
+``scale``/``shift`` are per-output-column vectors.  This one form covers all
+Darknet layer needs: plain bias (scale=1, shift=bias), folded batch-norm
+(scale=gamma/sqrt(var+eps), shift=beta-mean*scale [+bias]), and bare GEMM
+(scale=None, shift=None).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Activations supported by the fused epilogue.  Darknet's default conv
+# activation is leaky ReLU with slope 0.1; LM blocks use silu/gelu.
+_LEAKY_SLOPE = 0.1
+
+
+def apply_act(x, act: str):
+    if act == "linear":
+        return x
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "leaky":
+        return jnp.where(x > 0, x, _LEAKY_SLOPE * x)
+    if act == "silu":
+        return x * (1.0 / (1.0 + jnp.exp(-x)))
+    if act == "gelu":
+        # tanh approximation, matches jax.nn.gelu(approximate=True)
+        c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+        return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+    raise ValueError(f"unknown activation: {act!r}")
+
+
+ACTIVATIONS = ("linear", "relu", "leaky", "silu", "gelu")
+
+
+def epilogue(acc, scale, shift, act: str):
+    """acc: (bm, bn) fp32 tile; scale/shift: (1, bn) or None."""
+    y = acc
+    if scale is not None:
+        y = y * scale
+    if shift is not None:
+        y = y + shift
+    return apply_act(y, act)

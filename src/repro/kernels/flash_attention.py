@@ -1,0 +1,121 @@
+"""Blockwise (flash) attention kernel for prefill/train.
+
+This is the paper's streaming idea applied to the attention hot-spot: KV
+tiles stream through VMEM while running softmax statistics (m, l) and the
+output accumulator stay resident on-chip — the S×S score matrix never exists
+in HBM, exactly like the engine's GEMM accumulator never round-trips.
+
+Grid: (B*H, Sq/bq, Skv/bk), KV innermost ("arbitrary") so the (m, l, acc)
+scratch carries across KV steps for a fixed query tile.  Causal masking uses
+global indices; fully-masked KV blocks are skipped with pl.when (on TPU the
+DMA still prefetches them; a §Perf iteration notes the trimmed-grid variant).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _COMPILER_PARAMS = getattr(pltpu, "CompilerParams",
+                               getattr(pltpu, "TPUCompilerParams", None))
+except ImportError:  # pragma: no cover
+    pltpu = None
+    _COMPILER_PARAMS = None
+
+_NEG_INF = -1e30
+_LANES = 128  # stats scratch is lane-replicated for TPU vector layout
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  nk: int, bq: int, bk: int, sm_scale: float, causal: bool,
+                  q_offset: int):
+    i, j = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _body():
+        q = q_ref[0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0].astype(jnp.float32)          # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32,
+                                precision=jax.lax.Precision.HIGHEST)
+        s = s * sm_scale                           # (bq, bk)
+        if causal:
+            qi = q_offset + i * bq + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 0)
+            kj = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kj <= qi, s, _NEG_INF)
+        m_prev = m_ref[...][:, :1]                 # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                     # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)            # (bq, 1)
+        l_new = l_ref[...][:, :1] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+            precision=jax.lax.Precision.HIGHEST)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    if causal:
+        # Skip KV blocks strictly above the diagonal for this query tile.
+        pl.when(j * bk <= q_offset + i * bq + bq - 1)(_body)
+    else:
+        _body()
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        l = l_ref[...][:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0 output
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, sm_scale=None,
+                    bq: int = 256, bk: int = 256, interpret: bool = True):
+    """q: (BH, Sq, D); k, v: (BH, Skv, D).  Returns (BH, Sq, D) in q.dtype.
+
+    Sq % bq == 0 and Skv % bk == 0 (ops wrapper pads).  When causal,
+    queries are right-aligned against keys (q_offset = Skv - Sq).
+    """
+    bh, sq, d = q.shape
+    _, skv, _ = k.shape
+    assert sq % bq == 0 and skv % bk == 0, ((sq, skv), (bq, bk))
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    grid = (bh, sq // bq, skv // bk)
+    scratch = []
+    if pltpu is not None:
+        scratch = [pltpu.VMEM((bq, _LANES), jnp.float32),   # m
+                   pltpu.VMEM((bq, _LANES), jnp.float32),   # l
+                   pltpu.VMEM((bq, d), jnp.float32)]        # acc
+    compiler_params = None
+    if not interpret and _COMPILER_PARAMS is not None:
+        compiler_params = _COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    kernel = functools.partial(
+        _flash_kernel, nk=grid[2], bq=bq, bk=bk, sm_scale=float(sm_scale),
+        causal=causal, q_offset=skv - sq)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+        **({"compiler_params": compiler_params} if compiler_params else {}),
+    )(q, k, v)

@@ -1,0 +1,171 @@
+"""The paper's "Innovative Compute Engine", TPU-native.
+
+FPGA original: a tiled FP32 GEMM unit that (1) stages operand tiles in BRAM,
+(2) streams tiles between producer/consumer PEs so the MAC array never stalls
+on external memory, and (3) fuses the activation stage into the stream.
+
+TPU adaptation (see DESIGN.md §2):
+  * BRAM tiles        -> VMEM blocks, made explicit with pl.BlockSpec.
+  * HLS streams       -> the pallas_call grid pipeline: while the MXU consumes
+                         tile (i, j, s) the DMA engine prefetches (i, j, s+1);
+                         the fp32 accumulator lives in a VMEM scratch and
+                         never round-trips to HBM during the K loop.
+  * stream-fused act  -> epilogue applied to the VMEM tile on the last K step,
+                         so the output is written to HBM exactly once.
+  * MAC array width   -> block shapes default to multiples of (8, 128) MXU
+                         lanes; 128-aligned shapes hit the systolic sweet spot.
+
+Grid layout is (M/bm, N/bn, K/bk) with K innermost ("arbitrary" semantics on
+TPU): consecutive steps share the same output tile, which is what lets the
+accumulator stay resident in VMEM — the moral equivalent of the paper's
+"multiple mathematical executions in a single clock cycle" on a streaming
+operand window.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import epilogue
+
+try:  # TPU compiler params: name moved across jax versions.
+    from jax.experimental.pallas import tpu as pltpu
+    _COMPILER_PARAMS = getattr(pltpu, "CompilerParams",
+                               getattr(pltpu, "TPUCompilerParams", None))
+except ImportError:  # pragma: no cover
+    pltpu = None
+    _COMPILER_PARAMS = None
+
+
+def _gemm_kernel(x_ref, w_ref, scale_ref, shift_ref, o_ref, acc_ref, *,
+                 nsteps: int, act: str, out_dtype):
+    """One (bm, bn) output tile; K-loop accumulates into VMEM scratch."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...],
+        preferred_element_type=jnp.float32,
+        precision=jax.lax.Precision.HIGHEST,
+    )
+
+    @pl.when(pl.program_id(2) == nsteps - 1)
+    def _epilogue():
+        scale = scale_ref[...] if scale_ref is not None else None
+        shift = shift_ref[...] if shift_ref is not None else None
+        o_ref[...] = epilogue(acc_ref[...], scale, shift, act).astype(out_dtype)
+
+
+def gemm(x, w, *, scale=None, shift=None, act: str = "linear",
+         out_dtype=None, bm: int = 256, bk: int = 512, bn: int = 256,
+         interpret: bool = True):
+    """Fused tiled GEMM: act((x @ w) * scale + shift).
+
+    x: (M, K), w: (K, N) with M % bm == K % bk == N % bn == 0 (ops.matmul
+    pads); scale/shift: (N,) vectors or None.  fp32 accumulation always.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (
+        f"unpadded shapes {(m, k, n)} vs blocks {(bm, bk, bn)}")
+    out_dtype = out_dtype or x.dtype
+    grid = (m // bm, n // bn, k // bk)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),   # x tile: row i, K step s
+        pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),   # w tile: K step s, col j
+    ]
+    args = [x, w]
+    kernel = _gemm_kernel
+    # scale/shift ride along as (1, bn) column blocks (same col index map).
+    if scale is not None:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, s: (0, j)))
+        args.append(scale.reshape(1, n).astype(jnp.float32))
+    if shift is not None:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, s: (0, j)))
+        args.append(shift.reshape(1, n).astype(jnp.float32))
+
+    # Bind optional refs positionally.
+    def kernel_fn(*refs):
+        x_ref, w_ref = refs[0], refs[1]
+        idx = 2
+        s_ref = None
+        b_ref = None
+        if scale is not None:
+            s_ref = refs[idx]; idx += 1
+        if shift is not None:
+            b_ref = refs[idx]; idx += 1
+        o_ref, acc_ref = refs[idx], refs[idx + 1]
+        _gemm_kernel(x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref,
+                     nsteps=grid[2], act=act, out_dtype=out_dtype)
+
+    compiler_params = None
+    if not interpret and _COMPILER_PARAMS is not None:
+        # M/N tiles are independent (parallel); K carries the accumulator.
+        compiler_params = _COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    scratch = []
+    if pltpu is not None:
+        scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
+
+    call = pl.pallas_call(
+        kernel_fn,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+        **({"compiler_params": compiler_params} if compiler_params else {}),
+    )
+    return call(*args)
+
+
+def _bmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, nsteps: int, out_dtype):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[0], w_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+        precision=jax.lax.Precision.HIGHEST)
+    @pl.when(pl.program_id(3) == nsteps - 1)
+    def _out():
+        o_ref[0] = acc_ref[...].astype(out_dtype)
+
+
+def bmm(x, w, *, out_dtype=None, bm: int = 256, bk: int = 256, bn: int = 256,
+        interpret: bool = True):
+    """Batched GEMM (B, M, K) @ (B, K, N) with per-batch grid dimension."""
+    b, m, k = x.shape
+    b2, k2, n = w.shape
+    assert b == b2 and k == k2
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0
+    out_dtype = out_dtype or x.dtype
+    grid = (b, m // bm, n // bn, k // bk)
+    scratch = [pltpu.VMEM((bm, bn), jnp.float32)] if pltpu is not None else []
+    compiler_params = None
+    if not interpret and _COMPILER_PARAMS is not None:
+        compiler_params = _COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"))
+    call = pl.pallas_call(
+        functools.partial(_bmm_kernel, nsteps=grid[3], out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda g, i, j, s: (g, i, s)),
+            pl.BlockSpec((1, bk, bn), lambda g, i, j, s: (g, s, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda g, i, j, s: (g, i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, m, n), out_dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+        **({"compiler_params": compiler_params} if compiler_params else {}),
+    )
+    return call(x, w)

@@ -1,0 +1,85 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+These handle the "any shape of matrices" property the paper advertises
+(Fig. 3 deliberately uses non-sweet-spot dims): inputs are zero-padded up to
+block multiples, the kernel runs on the padded problem, and the result is
+sliced back.  Zero padding is exact for GEMM (0-rows/cols contribute 0), and
+the epilogue is applied inside the kernel on padded columns whose outputs are
+discarded by the slice.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import gemm as gemm_kernel
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def pick_blocks(m: int, k: int, n: int, dtype) -> tuple[int, int, int]:
+    """Block-shape heuristic for the VMEM working set.
+
+    Targets: MXU alignment (multiples of (8,128) lanes — we use 128 where the
+    dim allows), and a double-buffered working set
+    2*(bm*bk + bk*bn) + 2*bm*bn floats comfortably under ~8 MiB of VMEM.
+    """
+    itemsize = jnp.dtype(dtype).itemsize
+    bm = min(_round_up(m, 8), 256)
+    bn = min(_round_up(n, 128), 256)
+    # Grow bk while the working set stays under budget.
+    budget = 8 * 1024 * 1024
+    bk = 128
+    while bk < 2048:
+        nxt = bk * 2
+        ws = 2 * (bm * nxt + nxt * bn) * itemsize + 2 * bm * bn * 4
+        if ws > budget or nxt > _round_up(k, 128):
+            break
+        bk = nxt
+    return bm, bk, bn
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("act", "out_dtype", "bm", "bk", "bn", "interpret"))
+def matmul(x, w, scale=None, shift=None, *, act: str = "linear",
+           out_dtype=None, bm: int = 0, bk: int = 0, bn: int = 0,
+           interpret: bool = True):
+    """Fused GEMM on the compute engine, arbitrary (M, K) x (K, N)."""
+    m, k = x.shape
+    _, n = w.shape
+    out_dtype = out_dtype or x.dtype
+    if not (bm and bk and bn):
+        bm, bk, bn = pick_blocks(m, k, n, x.dtype)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    sp = jnp.pad(scale, (0, np_ - n)) if scale is not None else None
+    bp = jnp.pad(shift, (0, np_ - n)) if shift is not None else None
+    out = gemm_kernel.gemm(xp, wp, scale=sp, shift=bp, act=act,
+                           out_dtype=out_dtype, bm=bm, bk=bk, bn=bn,
+                           interpret=interpret)
+    return out[:m, :n]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("out_dtype", "bm", "bk", "bn", "interpret"))
+def bmm(x, w, *, out_dtype=None, bm: int = 0, bk: int = 0, bn: int = 0,
+        interpret: bool = True):
+    """Batched GEMM (B, M, K) @ (B, K, N) on the engine."""
+    b, m, k = x.shape
+    _, _, n = w.shape
+    out_dtype = out_dtype or x.dtype
+    if not (bm and bk and bn):
+        bm, bk, bn = pick_blocks(m, k, n, x.dtype)
+        bm, bk, bn = min(bm, 128), min(bk, 256), min(bn, 128)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = jnp.pad(x, ((0, 0), (0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, 0), (0, kp - k), (0, np_ - n)))
+    out = gemm_kernel.bmm(xp, wp, out_dtype=out_dtype, bm=bm, bk=bk, bn=bn,
+                          interpret=interpret)
+    return out[:, :m, :n]

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (interpret-mode
+on CPU, real lowering on TPU).  They are deliberately written with the most
+obvious jnp formulation — no tiling, no streaming — so that any disagreement
+points at the kernel, not the oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import apply_act
+
+
+def matmul_ref(x, w, *, scale=None, shift=None, act: str = "linear",
+               out_dtype=None):
+    """Oracle for the fused GEMM engine: act((x @ w) * scale + shift).
+
+    x: (M, K); w: (K, N); scale/shift: (N,) or None.
+    Accumulation is always fp32 (matches the engine's VMEM accumulator).
+    """
+    out_dtype = out_dtype or x.dtype
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32,
+                  precision=jax.lax.Precision.HIGHEST)
+    if scale is not None:
+        acc = acc * scale.astype(jnp.float32)[None, :]
+    if shift is not None:
+        acc = acc + shift.astype(jnp.float32)[None, :]
+    return apply_act(acc, act).astype(out_dtype)
+
+
+def bmm_ref(x, w, *, out_dtype=None):
+    """Batched GEMM oracle: (B, M, K) @ (B, K, N)."""
+    out_dtype = out_dtype or x.dtype
+    acc = jnp.einsum("bmk,bkn->bmn", x, w,
+                     preferred_element_type=jnp.float32,
+                     precision=jax.lax.Precision.HIGHEST)
+    return acc.astype(out_dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, sm_scale=None):
+    """Oracle for the blockwise attention kernel.
+
+    q: (B, Sq, H, D); k, v: (B, Skv, H, D)  (kv heads already broadcast).
+    Returns (B, Sq, H, D) in q.dtype; softmax in fp32.
+    """
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    if sm_scale is None:
+        sm_scale = 1.0 / (D ** 0.5)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32),
+                        precision=jax.lax.Precision.HIGHEST) * sm_scale
+    if causal:
+        qi = jnp.arange(Sq)[:, None] + (Skv - Sq)
+        kj = jnp.arange(Skv)[None, :]
+        logits = jnp.where((kj <= qi)[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32),
+                     precision=jax.lax.Precision.HIGHEST)
+    return out.astype(q.dtype)

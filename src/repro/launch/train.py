@@ -1,0 +1,110 @@
+"""End-to-end trainer: checkpoint/restart, failure injection, watchdog.
+
+Usage (examples/train_lm.py wraps this):
+    python -m repro.launch.train --arch qwen2-0.5b --steps 200 --reduced
+
+The loop is deliberately boring — that is the point.  Everything stateful is
+(params, opt_state, data step); all three restore exactly from the latest
+checkpoint, and the data pipeline is a pure function of the step index, so a
+crash at step N and a restart replays step N bit-identically
+(tests/test_fault_tolerance.py asserts this).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import manager as ckpt
+from repro.configs.base import SHAPES, ShapeConfig, get_arch, reduced
+from repro.core.engine import make_engine
+from repro.data.pipeline import SyntheticLM
+from repro.launch.fault import FailureInjector, StepWatchdog
+from repro.models import transformer as tfm
+from repro.train import optimizer as opt
+from repro.train.train_step import make_train_step
+
+
+def train_loop(cfg, *, steps: int, batch: int, seq: int, ckpt_dir: str,
+               ckpt_every: int = 50, lr: float = 3e-4,
+               num_microbatches: int = 1, seed: int = 0,
+               fail_at_step: int | None = None, log_every: int = 10,
+               engine=None, metrics_out: list | None = None):
+    engine = engine or make_engine("xla", "fp32_strict")
+    ocfg = opt.AdamWConfig(lr=lr, warmup_steps=min(100, steps // 10 + 1),
+                           decay_steps=steps)
+    shape = ShapeConfig("train", seq, batch, "train")
+    data = SyntheticLM(cfg, shape, seed=seed)
+    step_fn = jax.jit(make_train_step(
+        engine, cfg, ocfg, num_microbatches=num_microbatches,
+        ce_chunk=min(512, seq), n_q_chunks=min(8, max(seq // 8, 1))))
+
+    # ---- init or restore ----
+    start = ckpt.latest_step(ckpt_dir) if ckpt_dir else None
+    params = tfm.init_params(jax.random.PRNGKey(seed), cfg)
+    opt_state = opt.adamw_init(params)
+    if start is not None:
+        (params, opt_state), manifest = ckpt.restore(
+            ckpt_dir, start, (params, opt_state))
+        print(f"[train] restored step {start} from {ckpt_dir}")
+    else:
+        start = 0
+
+    injector = FailureInjector(fail_at_step)
+    watchdog = StepWatchdog()
+    for step in range(start, steps):
+        injector.check(step)
+        batch_np = data.batch(step)
+        batch_dev = jax.tree.map(jnp.asarray, batch_np)
+        watchdog.start()
+        params, opt_state, metrics = step_fn(params, opt_state, batch_dev)
+        loss = float(metrics["loss"])
+        wd = watchdog.stop(step)
+        if metrics_out is not None:
+            metrics_out.append({"step": step, "loss": loss})
+        if step % log_every == 0 or step == steps - 1:
+            print(f"[train] step={step} loss={loss:.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"t={wd['step_time_s']:.2f}s"
+                  + (" STRAGGLER" if wd["straggler"] else ""))
+        do_ckpt = ckpt_dir and ((step + 1) % ckpt_every == 0
+                                or wd["checkpoint_now"]
+                                or step == steps - 1)
+        if do_ckpt:
+            ckpt.save(ckpt_dir, step + 1, (params, opt_state),
+                      extra={"loss": loss, "arch": cfg.name})
+            ckpt.retain(ckpt_dir, keep=3)
+    return params, opt_state
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced same-family config (CPU-scale)")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--fail-at-step", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    train_loop(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+               ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+               lr=args.lr, num_microbatches=args.microbatches,
+               fail_at_step=args.fail_at_step)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,327 @@
+"""Attention: GQA with blockwise streaming softmax, and MLA (DeepSeek).
+
+Prefill/train never materializes the S×S score matrix: queries are processed
+in static chunks and KV streams through an online-softmax scan — the same
+"operands stream through on-chip memory, accumulator never leaves" structure
+as the paper's GEMM engine (kernels/flash_attention.py is the Pallas TPU
+version of exactly this loop; this file is the distribution-aware jnp
+formulation that GSPMD can shard, used for lowering at 512 devices).
+
+Sharding modes (chosen per arch by sharding/policy.py):
+  heads : KV-head-parallel — zero attention comm, used when n_kv_heads
+          divides the TP axis.
+  seq   : query-sequence-parallel — uniform utilization for small-KV GQA
+          (kv=2..10), costs one K/V all-gather per layer (GSPMD inserts it).
+
+Decode attends over a sequence-sharded KV cache; softmax over the sharded
+axis lowers to flash-decoding (partial max/sum + all-reduce) under GSPMD.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import ComputeEngine
+from repro.models.common import norm_init, rope_apply
+from repro.sharding import hints
+
+_NEG = -1e30
+
+
+# ------------------------------------------------- blockwise core (no S²) ---
+
+def blockwise_attention(engine: ComputeEngine, q, k, v, *, causal: bool,
+                        n_q_chunks: int = 8, kv_chunk: int = 1024,
+                        shard_mode: str = "seq"):
+    """q: (B, Sq, KV, G, Dh); k, v: (B, Skv, KV, Dh) -> (B, Sq, KV, G, Dh).
+
+    Outer loop: static (unrolled) query chunks, each with a *statically
+    trimmed* causal KV extent — compiled FLOPs ≈ (1/2 + 1/2n)·S² instead of
+    S² (exactness of the useful-FLOPs ratio matters for §Roofline).
+    Inner loop: lax.scan over KV blocks carrying (m, l, acc) in fp32.
+    """
+    B, Sq, KV, G, Dh = q.shape
+    Skv = k.shape[1]
+    Dv = v.shape[-1]  # may differ from Dh (MLA: qk 192, v 128)
+    q_offset = Skv - Sq  # right-aligned (prefill continuation safe)
+    qc = max(Sq // n_q_chunks, 1)
+    n_q = Sq // qc
+    assert n_q * qc == Sq, (Sq, qc)
+    sm = 1.0 / (Dh ** 0.5)
+    prec = engine.precision
+
+    def q_shard(x):
+        if shard_mode == "heads":
+            return hints.shard(x, "dp", None, "model", None, None)
+        return hints.shard(x, "dp", "model", None, None, None)
+
+    def kv_shard(x):
+        if shard_mode == "heads":
+            return hints.shard(x, "dp", None, "model", None)
+        return hints.shard(x, "dp", None, None, None)  # replicated KV
+
+    q = q_shard(q)
+    k = kv_shard(k)
+    v = kv_shard(v)
+
+    outs = []
+    for i in range(n_q):
+        qi = jax.lax.slice_in_dim(q, i * qc, (i + 1) * qc, axis=1)
+        extent = q_offset + (i + 1) * qc if causal else Skv
+        kvc = min(kv_chunk, extent)
+        n_kv = -(-extent // kvc)          # ceil
+
+        def body(carry, j, qi=qi, kvc=kvc, i=i):
+            m, l, acc = carry
+            kj = jax.lax.dynamic_slice_in_dim(k, j * kvc, kvc, axis=1)
+            vj = jax.lax.dynamic_slice_in_dim(v, j * kvc, kvc, axis=1)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk",
+                           qi.astype(prec.compute_dtype),
+                           kj.astype(prec.compute_dtype),
+                           preferred_element_type=jnp.float32,
+                           precision=prec.lax_precision) * sm
+            q_idx = (q_offset + i * qc
+                     + jax.lax.broadcasted_iota(jnp.int32, s.shape, 3))
+            k_idx = j * kvc + jax.lax.broadcasted_iota(jnp.int32, s.shape, 4)
+            valid = k_idx < extent
+            if causal:
+                valid = valid & (k_idx <= q_idx)
+            s = jnp.where(valid, s, _NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(prec.compute_dtype),
+                vj.astype(prec.compute_dtype),
+                preferred_element_type=jnp.float32,
+                precision=prec.lax_precision)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, KV, G, qc), _NEG, jnp.float32),
+                jnp.zeros((B, KV, G, qc), jnp.float32),
+                jnp.zeros((B, KV, G, qc, Dv), jnp.float32))
+        if n_kv == 1:
+            (m, l, acc), _ = body(init, 0)
+        else:
+            (m, l, acc), _ = jax.lax.scan(body, init, jnp.arange(n_kv))
+        out = (acc / jnp.maximum(l, 1e-37)[..., None])
+        outs.append(out.transpose(0, 3, 1, 2, 4))     # (B, qc, KV, G, Dh)
+    y = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    return q_shard(y).astype(q.dtype)
+
+
+# ------------------------------------------------------------- GQA layer ---
+
+def gqa_init(key, cfg):
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    sd = lambda fan_in: 1.0 / (fan_in ** 0.5)
+    p = {
+        "wq": jax.random.normal(ks[0], (D, H * hd), jnp.float32) * sd(D),
+        "wk": jax.random.normal(ks[1], (D, KV * hd), jnp.float32) * sd(D),
+        "wv": jax.random.normal(ks[2], (D, KV * hd), jnp.float32) * sd(D),
+        "wo": jax.random.normal(ks[3], (H * hd, D), jnp.float32) * sd(H * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((KV * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((KV * hd,), jnp.float32)
+    return p
+
+
+def gqa_forward(engine: ComputeEngine, p, x, cos, sin, cfg, *,
+                shard_mode: str = "seq", n_q_chunks: int = 8,
+                return_kv: bool = False):
+    """x: (B, S, D) -> (B, S, D).  Full-sequence (train / prefill)."""
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = engine.matmul(x, p["wq"], shift=p.get("bq"))
+    k = engine.matmul(x, p["wk"], shift=p.get("bk"))
+    v = engine.matmul(x, p["wv"], shift=p.get("bv"))
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if cos is not None:
+        q = rope_apply(q, cos, sin)
+        k = rope_apply(k, cos, sin)
+    qg = q.reshape(B, S, KV, H // KV, hd)
+    y = blockwise_attention(engine, qg, k, v, causal=cfg.causal,
+                            n_q_chunks=n_q_chunks, shard_mode=shard_mode)
+    y = y.reshape(B, S, H * hd)
+    y = hints.shard(y, "dp", None, "model")
+    out = engine.matmul(y, p["wo"])
+    if return_kv:
+        return out, {"k": k, "v": v}
+    return out
+
+
+def cache_write(cache, new, pos, axis: int = 1):
+    """Write a one-token entry at pos; pos may be scalar or per-batch (B,)
+    (continuous batching: each slot at its own position)."""
+    new = new.astype(cache.dtype)
+    if pos.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(cache, new, pos,
+                                                   axis=axis)
+    return jax.vmap(
+        lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(
+            c, n, p, axis=axis - 1))(cache, new, pos)
+
+
+def _pos_mask(s, pos, k_axis: int):
+    k_idx = jax.lax.broadcasted_iota(jnp.int32, s.shape, k_axis)
+    if pos.ndim == 0:
+        return jnp.where(k_idx <= pos, s, _NEG)
+    shape = [1] * s.ndim
+    shape[0] = pos.shape[0]
+    return jnp.where(k_idx <= pos.reshape(shape), s, _NEG)
+
+
+def gqa_decode(engine: ComputeEngine, p, x, cache, pos, cos, sin, cfg):
+    """One-token decode against a sequence-sharded KV cache.
+
+    x: (B, 1, D); cache: {"k","v"}: (B, S_max, KV, hd) with S_max sharded
+    over 'model'; pos: scalar int, or (B,) per-slot positions.
+    Returns (y, cache').
+    """
+    B, _, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    S_max = cache["k"].shape[1]
+    q = engine.matmul(x, p["wq"], shift=p.get("bq")).reshape(B, 1, H, hd)
+    k = engine.matmul(x, p["wk"], shift=p.get("bk")).reshape(B, 1, KV, hd)
+    v = engine.matmul(x, p["wv"], shift=p.get("bv")).reshape(B, 1, KV, hd)
+    if cos is not None:
+        q = rope_apply(q, cos, sin)
+        k = rope_apply(k, cos, sin)
+    ck = cache_write(cache["k"], k, pos)
+    cv = cache_write(cache["v"], v, pos)
+    ck = hints.shard(ck, "dp", "model", None, None)
+    cv = hints.shard(cv, "dp", "model", None, None)
+    qg = q.reshape(B, 1, KV, H // KV, hd)
+    # Flash-decoding under GSPMD: S_max is sharded; max/sum lower to partial
+    # reductions + all-reduce, the weighted sum to partial matmul+all-reduce.
+    prec = engine.precision
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(prec.compute_dtype),
+                   ck.astype(prec.compute_dtype),
+                   preferred_element_type=jnp.float32,
+                   precision=prec.lax_precision) / (hd ** 0.5)
+    s = _pos_mask(s, pos, 4)
+    w = jax.nn.softmax(s, axis=-1)
+    y = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(prec.compute_dtype),
+                   cv.astype(prec.compute_dtype),
+                   preferred_element_type=jnp.float32,
+                   precision=prec.lax_precision)
+    y = y.reshape(B, 1, H * hd).astype(x.dtype)
+    return engine.matmul(y, p["wo"]), {"k": ck, "v": cv}
+
+
+# ------------------------------------------------------------- MLA layer ---
+
+def mla_init(key, cfg):
+    D, H = cfg.d_model, cfg.n_heads
+    nope, rope_d = cfg.qk_nope_dim, cfg.qk_rope_dim
+    lora, vd = cfg.kv_lora_rank, cfg.v_head_dim
+    ks = jax.random.split(key, 5)
+    sd = lambda fan_in: 1.0 / (fan_in ** 0.5)
+    return {
+        "wq": jax.random.normal(ks[0], (D, H * (nope + rope_d)),
+                                jnp.float32) * sd(D),
+        "w_dkv": jax.random.normal(ks[1], (D, lora + rope_d),
+                                   jnp.float32) * sd(D),
+        "kv_norm": norm_init("rms", lora),
+        "w_uk": jax.random.normal(ks[2], (lora, H * nope),
+                                  jnp.float32) * sd(lora),
+        "w_uv": jax.random.normal(ks[3], (lora, H * vd),
+                                  jnp.float32) * sd(lora),
+        "wo": jax.random.normal(ks[4], (H * vd, D), jnp.float32) * sd(H * vd),
+    }
+
+
+def _mla_split(cfg):
+    return (cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.kv_lora_rank,
+            cfg.v_head_dim, cfg.n_heads)
+
+
+def mla_forward(engine: ComputeEngine, p, x, cos, sin, cfg, *,
+                n_q_chunks: int = 8, return_cache: bool = False):
+    """MLA prefill/train: materialize per-head K/V from the latent.
+
+    Head-parallel (16 heads divide the TP axis for deepseek-v2-lite).
+    """
+    from repro.models.common import rmsnorm
+    B, S, D = x.shape
+    nope, rope_d, lora, vd, H = _mla_split(cfg)
+    q = engine.matmul(x, p["wq"]).reshape(B, S, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope_apply(q_rope, cos, sin)
+    dkv = engine.matmul(x, p["w_dkv"])
+    c_kv = rmsnorm(dkv[..., :lora], p["kv_norm"]["scale"], cfg.norm_eps)
+    k_rope = rope_apply(dkv[..., lora:][:, :, None, :], cos, sin)
+    k_nope = engine.matmul(c_kv, p["w_uk"]).reshape(B, S, H, nope)
+    v = engine.matmul(c_kv, p["w_uv"]).reshape(B, S, H, vd)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, rope_d))], axis=-1)
+    # MHA layout: KV == H, G == 1; pad V's head dim up to qk dim not needed —
+    # blockwise_attention only requires q/k same Dh; v has its own dim.
+    qg = q_full.reshape(B, S, H, 1, nope + rope_d)
+    y = blockwise_attention(engine, qg, k_full, v, causal=True,
+                            n_q_chunks=n_q_chunks, shard_mode="heads")
+    y = y.reshape(B, S, H * vd)
+    y = hints.shard(y, "dp", None, "model")
+    out = engine.matmul(y, p["wo"])
+    if return_cache:
+        return out, {"c_kv": c_kv, "k_rope": k_rope[:, :, 0, :]}
+    return out
+
+
+def mla_decode(engine: ComputeEngine, p, x, cache, pos, cos, sin, cfg):
+    """Absorbed-matmul MLA decode (DeepSeek's inference form).
+
+    Cache holds only (c_kv: (B, S, lora), k_rope: (B, S, rope_d)) — 576
+    floats/token/layer — sequence-sharded.  W_uk is absorbed into the query
+    (q_nope @ W_uk per head) and W_uv applied after attention, so per-step
+    FLOPs are O(S·(lora+rope)·H) instead of O(S·H·(nope+vd)·lora).
+    """
+    from repro.models.common import rmsnorm
+    B, _, D = x.shape
+    nope, rope_d, lora, vd, H = _mla_split(cfg)
+    prec = engine.precision
+    q = engine.matmul(x, p["wq"]).reshape(B, 1, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope_apply(q_rope, cos, sin)
+    dkv = engine.matmul(x, p["w_dkv"])
+    c_kv = rmsnorm(dkv[..., :lora], p["kv_norm"]["scale"], cfg.norm_eps)
+    k_rope = rope_apply(dkv[..., lora:][:, :, None, :], cos, sin)[:, :, 0, :]
+    cc = cache_write(cache["c_kv"], c_kv, pos)
+    cr = cache_write(cache["k_rope"], k_rope, pos)
+    cc = hints.shard(cc, "dp", "model", None)
+    cr = hints.shard(cr, "dp", "model", None)
+    # absorb: q_abs[b,h,r] = sum_n q_nope[b,h,n] * W_uk[r, h, n]
+    w_uk = p["w_uk"].reshape(lora, H, nope)
+    q_abs = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(prec.compute_dtype),
+                       w_uk.astype(prec.compute_dtype),
+                       preferred_element_type=jnp.float32,
+                       precision=prec.lax_precision)
+    s = (jnp.einsum("bqhr,bsr->bhqs", q_abs.astype(prec.compute_dtype),
+                    cc.astype(prec.compute_dtype),
+                    preferred_element_type=jnp.float32,
+                    precision=prec.lax_precision)
+         + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(prec.compute_dtype),
+                      cr.astype(prec.compute_dtype),
+                      preferred_element_type=jnp.float32,
+                      precision=prec.lax_precision))
+    s = s / ((nope + rope_d) ** 0.5)
+    s = _pos_mask(s, pos, 3)
+    w = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", w.astype(prec.compute_dtype),
+                     cc.astype(prec.compute_dtype),
+                     preferred_element_type=jnp.float32,
+                     precision=prec.lax_precision)     # (B, 1, H, lora)
+    w_uv = p["w_uv"].reshape(lora, H, vd)
+    y = jnp.einsum("bqhr,rhv->bqhv", ctx.astype(prec.compute_dtype),
+                   w_uv.astype(prec.compute_dtype),
+                   preferred_element_type=jnp.float32,
+                   precision=prec.lax_precision)
+    y = y.reshape(B, 1, H * vd).astype(x.dtype)
+    return engine.matmul(y, p["wo"]), {"c_kv": cc, "k_rope": cr}

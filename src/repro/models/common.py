@@ -1,0 +1,115 @@
+"""Shared model pieces: norms, RoPE, embeddings, chunked cross-entropy."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import ComputeEngine
+
+
+# ------------------------------------------------------------------ norms ---
+
+def rmsnorm(x, scale, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def norm_apply(kind: str, p: dict, x, eps: float):
+    if kind == "rms":
+        return rmsnorm(x, p["scale"], eps)
+    return layernorm(x, p["scale"], p["bias"], eps)
+
+
+def norm_init(kind: str, d: int):
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layer":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+# ------------------------------------------------------------------- RoPE ---
+
+def rope_table(positions, dim: int, theta: float):
+    """positions: (...,) int -> cos/sin tables (..., dim/2) fp32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope_apply(x, cos, sin):
+    """x: (..., S, H, D); cos/sin: (S, D/2) (or broadcastable)."""
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    # cos/sin broadcast over head dim: (S, 1, D/2)
+    c = cos[..., None, :].astype(jnp.float32)
+    s = sin[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * c - x2f * s, x2f * c + x1f * s], axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------- embeddings ---
+
+def embed_init(key, vocab_padded: int, d: int):
+    return {"tokens": jax.random.normal(key, (vocab_padded, d),
+                                        jnp.float32) * 0.02}
+
+
+def embed_lookup(p, tokens, compute_dtype):
+    return p["tokens"].astype(compute_dtype)[tokens]
+
+
+# -------------------------------------------------- chunked cross-entropy ---
+
+def chunked_cross_entropy(engine: ComputeEngine, h, w_head, labels, *,
+                          vocab_real: int, chunk: int = 512):
+    """Mean CE over (B, S) without ever materializing (B, S, V) logits.
+
+    h: (B, S, D); w_head: (D, V_padded); labels: (B, S) int32.
+    Scans over sequence chunks; within a chunk the (B, chunk, V) logits are
+    vocab-sharded by GSPMD (w_head's output dim carries the 'model' axis) and
+    reduced via logsumexp, so per-chip memory is (B, chunk, V/16).
+    Padded vocab rows are masked to -inf.  Loss is computed in fp32.
+    """
+    B, S, D = h.shape
+    V = w_head.shape[-1]
+    chunk = min(chunk, S)
+    n = S // chunk
+    rem = S - n * chunk
+    assert rem == 0, (S, chunk)
+
+    hc = h.reshape(B, n, chunk, D).swapaxes(0, 1)        # (n, B, chunk, D)
+    lc = labels.reshape(B, n, chunk).swapaxes(0, 1)      # (n, B, chunk)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, (V,), 0)
+
+    def body(carry, xs):
+        hx, lx = xs
+        logits = engine.matmul(hx, w_head, out_dtype=jnp.float32)
+        logits = jnp.where(vocab_iota < vocab_real, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)          # (B, chunk)
+        gold = jnp.sum(
+            jnp.where(vocab_iota[None, None, :] == lx[..., None], logits, 0.0),
+            axis=-1)
+        return carry + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc))
+    return total / (B * S)
+
+
+def lm_head_logits(engine: ComputeEngine, h, w_head, *, vocab_real: int):
+    """Full logits for decode (S is 1 there; memory trivial)."""
+    V = w_head.shape[-1]
+    logits = engine.matmul(h, w_head, out_dtype=jnp.float32)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, (V,), 0)
+    return jnp.where(vocab_iota < vocab_real, logits, -1e30)

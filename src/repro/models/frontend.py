@@ -1,0 +1,49 @@
+"""Modality frontends (harness-mandated stubs).
+
+[vlm]/[audio] entries specify the transformer BACKBONE; input_specs()
+provides precomputed patch/frame embeddings.  What the model still owns is
+the projector that maps frontend features into d_model:
+
+  vision : LayerNorm + 2-layer MLP projector (InternVL's mlp1) over patch
+           embeddings; visual tokens are prepended to text embeddings.
+  audio  : feature projection (LayerNorm + Linear), wav2vec2/HuBERT style.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import ComputeEngine
+from repro.models.common import layernorm
+
+
+def frontend_init(key, cfg):
+    if cfg.frontend == "none":
+        return {}
+    fd, d = cfg.frontend_dim, cfg.d_model
+    ks = jax.random.split(key, 2)
+    if cfg.frontend == "vision":
+        return {
+            "ln": {"scale": jnp.ones((fd,), jnp.float32),
+                   "bias": jnp.zeros((fd,), jnp.float32)},
+            "w1": jax.random.normal(ks[0], (fd, d), jnp.float32) / fd ** 0.5,
+            "b1": jnp.zeros((d,), jnp.float32),
+            "w2": jax.random.normal(ks[1], (d, d), jnp.float32) / d ** 0.5,
+            "b2": jnp.zeros((d,), jnp.float32),
+        }
+    # audio
+    return {
+        "ln": {"scale": jnp.ones((fd,), jnp.float32),
+               "bias": jnp.zeros((fd,), jnp.float32)},
+        "w": jax.random.normal(ks[0], (fd, d), jnp.float32) / fd ** 0.5,
+        "b": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def frontend_apply(engine: ComputeEngine, p, feats, cfg):
+    """feats: (B, T, frontend_dim) -> (B, T, d_model)."""
+    x = layernorm(feats, p["ln"]["scale"], p["ln"]["bias"], cfg.norm_eps)
+    if cfg.frontend == "vision":
+        h = engine.matmul(x, p["w1"], shift=p["b1"], act="gelu")
+        return engine.matmul(h, p["w2"], shift=p["b2"])
+    return engine.matmul(x, p["w"], shift=p["b"])

@@ -1,0 +1,38 @@
+"""MLP blocks on the compute engine.
+
+SwiGLU (silu act) or plain GELU MLP.  The gate/up projections are
+column-parallel (flat d_ff carries the 'model' axis), down is row-parallel —
+the all-reduce after `wd` is the layer's only MLP collective.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import ComputeEngine
+from repro.sharding import hints
+
+
+def mlp_init(key, d_model: int, d_ff: int, act: str):
+    ks = jax.random.split(key, 3)
+    sd_in = 1.0 / (d_model ** 0.5)
+    sd_out = 1.0 / (d_ff ** 0.5)
+    p = {"wu": jax.random.normal(ks[0], (d_model, d_ff), jnp.float32) * sd_in,
+         "wd": jax.random.normal(ks[2], (d_ff, d_model), jnp.float32) * sd_out}
+    if act == "silu":  # gated (SwiGLU)
+        p["wg"] = jax.random.normal(ks[1], (d_model, d_ff),
+                                    jnp.float32) * sd_in
+    return p
+
+
+def mlp_forward(engine: ComputeEngine, p, x, act: str):
+    if "wg" in p:
+        # SwiGLU: silu(x@wg) * (x@wu); the silu is fused into the engine's
+        # epilogue of the gate GEMM (one pass over the gate tile).
+        g = engine.matmul(x, p["wg"], act="silu")
+        u = engine.matmul(x, p["wu"])
+        h = g * u
+    else:
+        h = engine.matmul(x, p["wu"], act=act)
+    h = hints.shard(h, "dp", None, "model")
+    return engine.matmul(h, p["wd"])

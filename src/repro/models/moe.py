@@ -1,0 +1,135 @@
+"""Mixture-of-Experts: top-k router + grouped capacity dispatch + EP.
+
+Dispatch follows the GShard/Switch grouped formulation: each batch row is a
+routing group (groups are dp-sharded, so position-in-expert cumsums stay
+local), tokens scatter into a (G, E, C, D) dispatch tensor, experts run as
+one batched GEMM with the expert dim sharded over 'model' (expert
+parallelism), results gather back with router weights.  Capacity overflow
+drops tokens (standard; the aux load-balance loss keeps it rare) — dropped
+tokens pass through via the residual connection.
+
+Shared experts (DeepSeek) / shared expert (Llama4) are a plain dense MLP of
+width n_shared * moe_d_ff, always on.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import ComputeEngine
+from repro.models.mlp import mlp_forward, mlp_init
+from repro.sharding import hints
+
+
+def moe_init(key, cfg):
+    D, E, F = cfg.d_model, cfg.n_routed_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    sd_in, sd_out = 1.0 / (D ** 0.5), 1.0 / (F ** 0.5)
+    p = {
+        "router": jax.random.normal(ks[0], (D, E), jnp.float32) * sd_in,
+        "wg": jax.random.normal(ks[1], (E, D, F), jnp.float32) * sd_in,
+        "wu": jax.random.normal(ks[2], (E, D, F), jnp.float32) * sd_in,
+        "wd": jax.random.normal(ks[3], (E, F, D), jnp.float32) * sd_out,
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], D, cfg.n_shared_experts * F, "silu")
+    return p
+
+
+def capacity(tokens_per_group: int, cfg) -> int:
+    c = int(tokens_per_group * cfg.top_k / cfg.n_routed_experts
+            * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)  # round up to 8, floor 8
+
+
+def moe_forward(engine: ComputeEngine, p, x, cfg):
+    """x: (B, S, D) -> (y: (B, S, D), aux_loss: scalar fp32)."""
+    B, S, D = x.shape
+    E, K = cfg.n_routed_experts, cfg.top_k
+    C = capacity(S, cfg)
+    prec = engine.precision
+    f32 = jnp.float32
+
+    # ---- routing (per token, fp32) ----
+    scores = engine.matmul(x, p["router"], out_dtype=f32)      # (B, S, E)
+    probs = jax.nn.softmax(scores, axis=-1)
+    w, idx = jax.lax.top_k(probs, K)                           # (B, S, K)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    onehot_top1 = jax.nn.one_hot(idx[..., 0], E, dtype=f32)
+    fe = jnp.mean(onehot_top1, axis=(0, 1))
+    aux = E * jnp.sum(fe * me)
+
+    # ---- position-in-expert within each group (group = batch row) ----
+    # Sort-based ranking: O(T·K) memory.  (The textbook one-hot cumsum
+    # materializes (T·K, E) — 1.6 TB for deepseek@32k — see DESIGN.md.)
+    TK = S * K
+    ids = idx.reshape(B, TK)
+    order = jnp.argsort(ids, axis=1, stable=True)              # (B, TK)
+    inv = jnp.zeros((B, TK), jnp.int32).at[
+        jnp.arange(B)[:, None], order].set(
+        jnp.broadcast_to(jnp.arange(TK, dtype=jnp.int32), (B, TK)))
+    counts = jnp.zeros((B, E), jnp.int32).at[
+        jnp.arange(B)[:, None], ids].add(1)                    # (B, E)
+    starts = jnp.cumsum(counts, axis=1) - counts               # (B, E)
+    pos = (inv - jnp.take_along_axis(starts, ids, axis=1)
+           ).reshape(B, S, K)
+    keep = (pos < C)
+    w = w * keep.astype(w.dtype)
+
+    # ---- dispatch: scatter tokens into (B, E, C, D) ----
+    xt = x.reshape(B, S, D)
+    b_idx = jax.lax.broadcasted_iota(jnp.int32, (B, S, K), 0)
+    e_idx = idx
+    c_idx = jnp.where(keep, pos, C)  # overflow -> scratch slot C (dropped)
+    disp = jnp.zeros((B, E, C + 1, D), prec.compute_dtype)
+    upd = jnp.broadcast_to(xt[:, :, None, :].astype(prec.compute_dtype),
+                           (B, S, K, D))
+    disp = disp.at[b_idx, e_idx, c_idx].add(upd, mode="drop")
+    disp = disp[:, :, :C, :]                                   # (B, E, C, D)
+    local = getattr(cfg, "moe_dispatch", "ep_scatter") == "local"
+    if local:
+        # §Perf variant: the scatter stays model-replicated (it is computed
+        # from model-replicated activations, so replication is free) and
+        # each model shard SLICES its experts locally — no dispatch
+        # collective at all.  See EXPERIMENTS.md §Perf (deepseek).
+        disp = hints.shard(disp, "dp", None, None, None)
+    else:
+        disp = hints.shard(disp, "dp", "model", None, None)
+
+    # ---- expert compute: batched gated MLP, expert dim sharded (EP) ----
+    rdt = prec.reduce_dtype
+    g = jnp.einsum("becd,edf->becf", disp, p["wg"].astype(prec.compute_dtype),
+                   preferred_element_type=rdt,
+                   precision=prec.lax_precision)
+    u = jnp.einsum("becd,edf->becf", disp, p["wu"].astype(prec.compute_dtype),
+                   preferred_element_type=rdt,
+                   precision=prec.lax_precision)
+    h = (g * jax.nn.sigmoid(g.astype(f32)).astype(rdt) * u).astype(
+        prec.compute_dtype)
+    h = hints.shard(h, "dp", "model", None, None)
+    eo = jnp.einsum("becf,efd->becd", h, p["wd"].astype(prec.compute_dtype),
+                    preferred_element_type=rdt,
+                    precision=prec.lax_precision)               # (B, E, C, D)
+    if local:
+        # all-gather expert outputs over the model axis (the ONLY MoE
+        # collective in this variant), then combine locally.
+        eo = hints.shard(eo.astype(prec.compute_dtype), "dp", None, None,
+                         None)
+    else:
+        eo = hints.shard(eo.astype(prec.compute_dtype), "dp", "model", None,
+                         None)
+
+    # ---- combine: gather each token's K expert outputs ----
+    # NB: stay in compute dtype — an fp32 combine forces fp32 cotangents
+    # through the cross-model scatter-add all-reduce (2x wire bytes under
+    # the mixed policy; measured in EXPERIMENTS.md §Perf iteration 2).
+    got = eo[b_idx, e_idx, jnp.where(keep, pos, 0)]             # (B, S, K, D)
+    y = jnp.sum(got * w.astype(got.dtype)[..., None],
+                axis=2).astype(x.dtype)
+
+    if "shared" in p:
+        y = y + mlp_forward(engine, p["shared"], x, "silu")
+    return y, aux

@@ -1,0 +1,274 @@
+"""Mamba2 / SSD (state-space duality) mixer.
+
+SSD is the matmul-dominant reformulation of the selective SSM — chosen by
+the assignment precisely because it plays to the paper's GEMM engine: the
+intra-chunk term is a masked attention-like batched GEMM, the inter-chunk
+term is a short scan over chunk states.  Everything heavy routes through
+fp32-accumulating einsums under the engine's precision policy.
+
+Projections are SPLIT per component (z, x, B, C, dt) rather than one fused
+in_proj: identical math/FLOPs, but each output then carries a clean sharding
+(x/z column-parallel over 'model' ≡ head-parallel since d_inner = H·P; B, C,
+dt are small and replicated).  SSD itself is head-parallel with ZERO
+collectives; the only all-reduce is out_proj's row-parallel contraction.
+
+Decode is the O(1) recurrence: state' = exp(dt·A)·state + dt·x⊗B.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import ComputeEngine
+from repro.models.common import rmsnorm
+from repro.sharding import hints
+
+
+def ssm_init(key, cfg):
+    d, di = cfg.d_model, cfg.ssm_d_inner
+    H, N, G = cfg.ssm_nheads, cfg.ssm_state, cfg.ssm_ngroups
+    conv = cfg.ssm_conv
+    ks = jax.random.split(key, 7)
+    sd = 1.0 / (d ** 0.5)
+    return {
+        "wz": jax.random.normal(ks[0], (d, di), jnp.float32) * sd,
+        "wx": jax.random.normal(ks[1], (d, di), jnp.float32) * sd,
+        "wB": jax.random.normal(ks[2], (d, G * N), jnp.float32) * sd,
+        "wC": jax.random.normal(ks[3], (d, G * N), jnp.float32) * sd,
+        "wdt": jax.random.normal(ks[4], (d, H), jnp.float32) * sd,
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),   # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "conv_x": jax.random.normal(ks[5], (conv, di), jnp.float32) * 0.2,
+        "conv_x_b": jnp.zeros((di,), jnp.float32),
+        "conv_B": jax.random.normal(ks[6], (conv, G * N), jnp.float32) * 0.2,
+        "conv_B_b": jnp.zeros((G * N,), jnp.float32),
+        "conv_C": jax.random.normal(ks[5], (conv, G * N), jnp.float32) * 0.2,
+        "conv_C_b": jnp.zeros((G * N,), jnp.float32),
+        "norm": {"scale": jnp.ones((di,), jnp.float32)},
+        "out": jax.random.normal(ks[4], (di, d), jnp.float32) / (di ** 0.5),
+    }
+
+
+def _silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def causal_conv1d(x, w, b):
+    """Depthwise causal conv.  x: (B, S, C); w: (conv, C) -> (B, S, C)."""
+    conv = w.shape[0]
+    S = x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (conv - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + S, :] * w[i] for i in range(conv))
+    return _silu(y + b)
+
+
+def _segsum(dA):
+    """dA: (..., Q) -> (..., Q, Q) lower-tri segment sums:
+    out[i, j] = sum_{k=j+1..i} dA[k] for i >= j, -inf above diagonal."""
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    i = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    return jnp.where(i >= j, diff, -jnp.inf)
+
+
+def ssd_chunked(engine: ComputeEngine, x, dt, A, Bm, Cm, chunk: int,
+                init_state=None):
+    """SSD scan in chunked (matmul) form.
+
+    x: (B, S, H, P); dt: (B, S, H) (already softplus'ed); A: (H,) negative;
+    Bm, Cm: (B, S, G, N).  Returns (y: (B, S, H, P), state: (B, H, P, N)).
+    """
+    b, s_orig, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    # Ragged lengths: pad with dt=0 rows — exact (decay exp(0)=1 carries the
+    # state through, input contribution dt·x⊗B = 0); padded y rows sliced off.
+    s = -(-s_orig // chunk) * chunk
+    if s != s_orig:
+        pad = ((0, 0), (0, s - s_orig), (0, 0), (0, 0))
+        x = jnp.pad(x, pad)
+        dt = jnp.pad(dt, pad[:3])
+        Bm = jnp.pad(Bm, pad)
+        Cm = jnp.pad(Cm, pad)
+    nc = s // chunk
+    prec = engine.precision
+    f32 = jnp.float32
+
+    xdt = (x.astype(f32) * dt.astype(f32)[..., None]).reshape(
+        b, nc, chunk, H, P)
+    dA = (dt.astype(f32) * A.astype(f32)).reshape(b, nc, chunk, H)
+    dA = jnp.moveaxis(dA, -1, 2)                      # (b, nc, H, Q)
+    dA_cs = jnp.cumsum(dA, axis=-1)                   # (b, nc, H, Q)
+    Bc = Bm.astype(f32).reshape(b, nc, chunk, G, N)
+    Cc = Cm.astype(f32).reshape(b, nc, chunk, G, N)
+
+    # Heads -> group map (broadcast when G < H).
+    def hg(t):  # (b, nc, Q, G, N) -> (b, nc, Q, H, N)
+        return jnp.repeat(t, rep, axis=3) if rep > 1 else t
+
+    Bh, Ch = hg(Bc), hg(Cc)
+    # Head-shard every intra-chunk operand: dt/B/C arrive model-REPLICATED
+    # (they come from small replicated projections), and without these
+    # constraints GSPMD replicates L/scores — (b,nc,H,Q,Q) fp32 at FULL H is
+    # 4.3 GB/chip/layer of pure waste (§Perf mamba2 iteration 1: 16x).
+    xdt = hints.shard(xdt, "dp", None, None, "model", None)
+    dA = hints.shard(dA, "dp", None, "model", None)
+    dA_cs = hints.shard(dA_cs, "dp", None, "model", None)
+    Bh = hints.shard(Bh, "dp", None, None, "model", None)
+    Ch = hints.shard(Ch, "dp", None, None, "model", None)
+
+    # ---- intra-chunk (the attention-like GEMM term) ----
+    L = jnp.exp(_segsum(dA))                          # (b, nc, H, Q, Q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh,
+                        preferred_element_type=f32,
+                        precision=prec.lax_precision)
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", scores * L, xdt,
+                        preferred_element_type=f32,
+                        precision=prec.lax_precision)
+
+    # ---- per-chunk input states ----
+    decay_in = jnp.exp(dA_cs[..., -1:] - dA_cs)       # (b, nc, H, Q)
+    states = jnp.einsum("bckhn,bchk,bckhp->bchpn", Bh, decay_in, xdt,
+                        preferred_element_type=f32,
+                        precision=prec.lax_precision)  # (b, nc, H, P, N)
+
+    # ---- inter-chunk recurrence (short scan over nc chunk states) ----
+    dA_tot = dA_cs[..., -1]                           # (b, nc, H)
+    if init_state is None:
+        init_state = jnp.zeros((b, H, P, N), f32)
+
+    def scan_body(st, inp):
+        dtot, snew = inp                              # (b,H), (b,H,P,N)
+        st_next = jnp.exp(dtot)[..., None, None] * st + snew
+        return st_next, st                            # emit state BEFORE chunk
+
+    final_state, states_prev = jax.lax.scan(
+        scan_body, init_state.astype(f32),
+        (jnp.moveaxis(dA_tot, 1, 0), jnp.moveaxis(states, 1, 0)))
+    states_prev = jnp.moveaxis(states_prev, 0, 1)     # (b, nc, H, P, N)
+
+    # ---- contribution of carried state ----
+    y_off = jnp.einsum("bcqhn,bchq,bchpn->bcqhp", Ch, jnp.exp(dA_cs),
+                       states_prev, preferred_element_type=f32,
+                       precision=prec.lax_precision)
+    y = (y_diag + y_off).reshape(b, s, H, P)[:, :s_orig]
+    return y.astype(x.dtype), final_state
+
+
+def ssm_forward(engine: ComputeEngine, p, x, cfg, *, return_cache=False):
+    """Full-sequence Mamba2 mixer.  x: (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    H, P, N, G = (cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state,
+                  cfg.ssm_ngroups)
+    z = engine.matmul(x, p["wz"])
+    xin = engine.matmul(x, p["wx"])
+    Bin = engine.matmul(x, p["wB"])
+    Cin = engine.matmul(x, p["wC"])
+    dt_raw = engine.matmul(x, p["wdt"], out_dtype=jnp.float32)
+    xin = hints.shard(xin, "dp", None, "model")
+    z = hints.shard(z, "dp", None, "model")
+    xc = causal_conv1d(xin, p["conv_x"], p["conv_x_b"])
+    Bc = causal_conv1d(Bin, p["conv_B"], p["conv_B_b"])
+    Cc = causal_conv1d(Cin, p["conv_C"], p["conv_C_b"])
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = hints.shard(xc.reshape(B, S, H, P), "dp", None, "model", None)
+    y, state = ssd_chunked(engine, xh, dt, A,
+                           Bc.reshape(B, S, G, N), Cc.reshape(B, S, G, N),
+                           cfg.ssm_chunk)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(
+        jnp.float32)
+    y = y.reshape(B, S, H * P).astype(x.dtype)
+    y = rmsnorm((y.astype(jnp.float32) * _silu(z.astype(jnp.float32))
+                 ).astype(x.dtype), p["norm"]["scale"], cfg.norm_eps)
+    y = hints.shard(y, "dp", None, "model")
+    out = engine.matmul(y, p["out"])
+    if not return_cache:
+        return out
+    conv = cfg.ssm_conv
+    cache = {
+        "conv_x": xin[:, S - (conv - 1):, :],
+        "conv_B": Bin[:, S - (conv - 1):, :],
+        "conv_C": Cin[:, S - (conv - 1):, :],
+        "ssm": state,
+    }
+    return out, cache
+
+
+def ssm_decode(engine: ComputeEngine, p, x, cache, cfg):
+    """One-token decode: O(1) state update.  x: (B, 1, D)."""
+    B, _, D = x.shape
+    H, P, N, G = (cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state,
+                  cfg.ssm_ngroups)
+    conv = cfg.ssm_conv
+    f32 = jnp.float32
+    z = engine.matmul(x, p["wz"])[:, 0]
+    xin = engine.matmul(x, p["wx"])[:, 0]
+    Bin = engine.matmul(x, p["wB"])[:, 0]
+    Cin = engine.matmul(x, p["wC"])[:, 0]
+    dt_raw = engine.matmul(x, p["wdt"], out_dtype=f32)[:, 0]
+
+    def step_conv(state, new, w, b):  # state (B, conv-1, C), new (B, C)
+        win = jnp.concatenate([state, new[:, None, :]], axis=1)
+        y = jnp.einsum("btc,tc->bc", win.astype(f32), w.astype(f32))
+        return _silu(y + b), win[:, 1:, :]
+
+    xc, conv_x = step_conv(cache["conv_x"], xin, p["conv_x"], p["conv_x_b"])
+    Bc, conv_B = step_conv(cache["conv_B"], Bin, p["conv_B"], p["conv_B_b"])
+    Cc, conv_C = step_conv(cache["conv_C"], Cin, p["conv_C"], p["conv_C_b"])
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])          # (B, H)
+    A = -jnp.exp(p["A_log"].astype(f32))
+    dA = jnp.exp(dt * A)                                  # (B, H)
+    xh = xc.reshape(B, H, P).astype(f32)
+    Bh = jnp.repeat(Bc.reshape(B, G, N), H // G, axis=1).astype(f32)
+    Ch = jnp.repeat(Cc.reshape(B, G, N), H // G, axis=1).astype(f32)
+    state = cache["ssm"].astype(f32)
+    state = (dA[..., None, None] * state
+             + (dt[..., None] * xh)[..., None] * Bh[:, :, None, :])
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch,
+                   preferred_element_type=f32)
+    y = y + p["D"].astype(f32)[None, :, None] * xh
+    y = y.reshape(B, H * P)
+    y = rmsnorm((y * _silu(z.astype(f32))).astype(x.dtype),
+                p["norm"]["scale"], cfg.norm_eps)
+    out = engine.matmul(y[:, None, :], p["out"])
+    new_cache = {"conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C,
+                 "ssm": state.astype(cache["ssm"].dtype)}
+    return out, new_cache
+
+
+def ssm_cache_init(B: int, cfg, dtype=jnp.float32):
+    H, P, N, G = (cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state,
+                  cfg.ssm_ngroups)
+    conv, di = cfg.ssm_conv, cfg.ssm_d_inner
+    return {
+        "conv_x": jnp.zeros((B, conv - 1, di), dtype),
+        "conv_B": jnp.zeros((B, conv - 1, G * N), dtype),
+        "conv_C": jnp.zeros((B, conv - 1, G * N), dtype),
+        "ssm": jnp.zeros((B, H, P, N), dtype),
+    }
+
+
+def ssd_reference(x, dt, A, Bm, Cm, init_state=None):
+    """Naive sequential recurrence oracle for property tests.
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t x_t ⊗ B_t ;  y_t = C_t · h_t.
+    """
+    b, s, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2) if rep > 1 else Bm
+    Ch = jnp.repeat(Cm, rep, axis=2) if rep > 1 else Cm
+    h = (jnp.zeros((b, H, P, N), jnp.float32) if init_state is None
+         else init_state.astype(jnp.float32))
+    ys = []
+    for t in range(s):
+        dA = jnp.exp(dt[:, t] * A)                     # (b, H)
+        h = (dA[..., None, None] * h
+             + (dt[:, t, :, None] * x[:, t].astype(jnp.float32))[..., None]
+             * Bh[:, t, :, None, :])
+        ys.append(jnp.einsum("bhpn,bhn->bhp", h, Ch[:, t]))
+    return jnp.stack(ys, axis=1), h

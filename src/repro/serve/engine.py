@@ -1,0 +1,97 @@
+"""Batched serving engine: slot-based continuous batching.
+
+A fixed pool of B slots decodes in lockstep with ONE jit'd decode_step per
+token, using per-slot position vectors (models support scalar pos for the
+dry-run cells and (B,) pos here).  Requests join free slots mid-flight —
+their prompt replays through the same decode program into that slot's cache
+rows (per-slot vmapped dynamic-update-slice); finished slots (EOS/max_new/
+max_len) free immediately.  vLLM-style continuous batching reduced to its
+JAX-native core: one compiled program, host-side slot bookkeeping.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import ComputeEngine
+from repro.serve import kvcache
+from repro.serve.serve_step import make_decode_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int = 16
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg, params, *, engine: ComputeEngine, slots: int = 4,
+                 max_len: int = 128, eos_id: int | None = None):
+        self.cfg, self.params = cfg, params
+        self.slots, self.max_len, self.eos_id = slots, max_len, eos_id
+        self.caches = kvcache.cache_init(cfg, slots, max_len)
+        self._decode = jax.jit(make_decode_step(engine, cfg))
+        self.pos = np.zeros(slots, np.int32)          # next write position
+        self.active: list[Request | None] = [None] * slots
+        self.pending: deque[Request] = deque()
+        self._replay: list[deque] = [deque() for _ in range(slots)]
+        self._last: np.ndarray = np.zeros(slots, np.int32)
+
+    def submit(self, req: Request):
+        self.pending.append(req)
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.active[s] is None and self.pending:
+                req = self.pending.popleft()
+                self.active[s] = req
+                self.pos[s] = 0
+                self._replay[s] = deque(req.prompt)
+
+    def step(self) -> int:
+        """One lockstep decode across all slots (idle slots ride along)."""
+        self._admit()
+        n_active = sum(r is not None for r in self.active)
+        if n_active == 0:
+            return 0
+        toks = np.zeros((self.slots, 1), np.int32)
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            toks[s, 0] = (self._replay[s].popleft() if self._replay[s]
+                          else self._last[s])
+        logits, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(toks),
+            jnp.asarray(self.pos))
+        nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1), np.int32)
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.pos[s] += 1
+            self._last[s] = nxt[s]
+            if self._replay[s]:
+                continue  # still prefilling this slot
+            req.out.append(int(nxt[s]))
+            if (len(req.out) >= req.max_new
+                    or (self.eos_id is not None
+                        and req.out[-1] == self.eos_id)
+                    or self.pos[s] >= self.max_len):
+                req.done = True
+                self.active[s] = None
+        return n_active
+
+    def run(self, requests: list[Request], max_steps: int = 10_000
+            ) -> list[Request]:
+        for r in requests:
+            self.submit(r)
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.pending:
+                break
+        return requests

@@ -1,0 +1,108 @@
+"""KV-cache construction, specs and shardings.
+
+Layout decisions (DESIGN.md §5):
+  * attention caches store the sequence dim SHARDED over 'model'
+    (long_500k additionally over 'data' when batch=1) — decode softmax over
+    the sharded axis lowers to flash-decoding under GSPMD;
+  * MLA caches hold only (c_kv, k_rope) = 576 floats/token/layer;
+  * SSM caches are O(1) in sequence length (conv tail + state).
+Cache dtype follows the engine's compute dtype (fp32 under the
+paper-faithful fp32_strict policy; bf16 under mixed).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.transformer import stack_program
+
+
+def _entry_struct(kind, cfg, n, B, S, dtype, inner=0):
+    lead = (n, inner) if inner else (n,)
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    if kind in ("dense", "gqa_moe", "zamba_shared"):
+        shp = (*(lead if kind != "zamba_shared" else (n,)), B, S, KV, hd)
+        return {"k": jax.ShapeDtypeStruct(shp, dtype),
+                "v": jax.ShapeDtypeStruct(shp, dtype)}
+    if kind in ("mla_dense", "mla_moe"):
+        return {"c_kv": jax.ShapeDtypeStruct((*lead, B, S, cfg.kv_lora_rank),
+                                             dtype),
+                "k_rope": jax.ShapeDtypeStruct((*lead, B, S, cfg.qk_rope_dim),
+                                               dtype)}
+    if kind == "mamba":
+        conv, di = cfg.ssm_conv, cfg.ssm_d_inner
+        GN = cfg.ssm_ngroups * cfg.ssm_state
+        H, Pd, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+        return {
+            "conv_x": jax.ShapeDtypeStruct((*lead, B, conv - 1, di), dtype),
+            "conv_B": jax.ShapeDtypeStruct((*lead, B, conv - 1, GN), dtype),
+            "conv_C": jax.ShapeDtypeStruct((*lead, B, conv - 1, GN), dtype),
+            "ssm": jax.ShapeDtypeStruct((*lead, B, H, Pd, N), dtype),
+        }
+    raise ValueError(kind)
+
+
+def cache_struct(cfg, B: int, S_max: int, dtype=jnp.float32):
+    """ShapeDtypeStruct pytree matching forward_prefill/decode_hidden."""
+    out = []
+    for kind, n in stack_program(cfg):
+        if kind == "zamba_super":
+            out.append({
+                "mamba": _entry_struct("mamba", cfg, n, B, S_max, dtype,
+                                       inner=cfg.attn_every),
+                "shared": _entry_struct("zamba_shared", cfg, n, B, S_max,
+                                        dtype),
+            })
+        else:
+            out.append(_entry_struct(kind, cfg, n, B, S_max, dtype))
+    return out
+
+
+def cache_init(cfg, B: int, S_max: int, dtype=jnp.float32):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_struct(cfg, B, S_max, dtype))
+
+
+def cache_pspecs(cfg, mesh, B: int, S_max: int):
+    """PartitionSpecs per cache leaf (jit-boundary safe: exact division)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_size = math.prod(mesh.shape[a] for a in dp) if dp else 1
+    tp = mesh.shape.get("model", 1)
+    batch_ax = dp if (dp and B % dp_size == 0) else None
+    # long-context batch=1: spread the sequence over data AND model
+    seq_ax = "model"
+    if batch_ax is None and dp:
+        if S_max % (dp_size * tp) == 0:
+            seq_ax = (*dp, "model")
+
+    def spec(path, leaf):
+        keys = [str(getattr(k, "key", k)) for k in path]
+        name = keys[-1]
+        nd = len(leaf.shape)
+        if name in ("k", "v"):               # (..., B, S, KV, hd)
+            lead = nd - 4
+            return P(*([None] * lead), batch_ax, seq_ax, None, None)
+        if name in ("c_kv", "k_rope"):       # (..., B, S, r)
+            lead = nd - 3
+            return P(*([None] * lead), batch_ax, seq_ax, None)
+        if name.startswith("conv"):          # (..., B, conv-1, C)
+            lead = nd - 3
+            last = "model" if leaf.shape[-1] % tp == 0 else None
+            return P(*([None] * lead), batch_ax, None, last)
+        if name == "ssm":                    # (..., B, H, P, N)
+            lead = nd - 4
+            h_ax = "model" if leaf.shape[-3] % tp == 0 else None
+            return P(*([None] * lead), batch_ax, h_ax, None, None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_struct(cfg, B, S_max))
+
+
+def cache_bytes(cfg, B: int, S_max: int, dtype=jnp.float32) -> int:
+    import numpy as np
+    return sum(math.prod(l.shape) * np.dtype(l.dtype).itemsize
+               for l in jax.tree_util.tree_leaves(
+                   cache_struct(cfg, B, S_max, dtype)))

@@ -1,0 +1,56 @@
+"""Serving steps: prefill (build cache + first logits) and decode (one token).
+
+These are the functions the dry-run lowers for the inference shape cells:
+``decode_*`` / ``long_*`` lower decode_step (one new token against a KV cache
+of seq_len), per the harness definition.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import ComputeEngine
+from repro.models import transformer as tfm
+from repro.models.common import lm_head_logits
+
+
+def make_prefill_step(engine: ComputeEngine, cfg, *, n_q_chunks: int = 8):
+    def prefill_step(params, inputs):
+        h, caches = tfm.forward_prefill(
+            engine, cfg, params, tokens=inputs.get("tokens"),
+            patch_embeds=inputs.get("patch_embeds"),
+            frames=inputs.get("frames"), n_q_chunks=n_q_chunks)
+        w = tfm.head_weight(params, cfg)
+        logits = lm_head_logits(engine, h[:, -1:, :], w,
+                                vocab_real=cfg.vocab_size)
+        return logits, caches
+    return prefill_step
+
+
+def make_forward_step(engine: ComputeEngine, cfg, *, n_q_chunks: int = 8):
+    """Encoder-only 'prefill': full-sequence logits, no cache."""
+    def forward_step(params, inputs):
+        h, _ = tfm.forward_hidden(
+            engine, cfg, params, tokens=inputs.get("tokens"),
+            patch_embeds=inputs.get("patch_embeds"),
+            frames=inputs.get("frames"), remat=False,
+            n_q_chunks=n_q_chunks)
+        w = tfm.head_weight(params, cfg)
+        logits = lm_head_logits(engine, h[:, -1:, :], w,
+                                vocab_real=cfg.vocab_size)
+        return logits
+    return forward_step
+
+
+def make_decode_step(engine: ComputeEngine, cfg):
+    def decode_step(params, caches, token, pos):
+        h, new_caches = tfm.decode_hidden(engine, cfg, params, caches,
+                                          token, pos)
+        w = tfm.head_weight(params, cfg)
+        logits = lm_head_logits(engine, h, w, vocab_real=cfg.vocab_size)
+        return logits, new_caches
+    return decode_step
+
+
+def greedy_sample(logits):
+    return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)

@@ -1,0 +1,84 @@
+"""Activation-sharding hints that degrade to no-ops off-mesh.
+
+Model code calls ``shard(x, "dp", None, "model", None)`` with *logical* axis
+tags; if a mesh is installed (``jax.set_mesh``) the tag resolves to real mesh
+axes and a with_sharding_constraint is applied, otherwise the call is a
+no-op.  This keeps model code mesh-agnostic: smoke tests run on 1 device,
+the dry-run runs on the 512-device production mesh, same code path.
+
+Tags:  "dp"    -> every batch-parallel axis present (("pod", "data"))
+       "model" -> the tensor-parallel axis
+       None    -> unsharded dim
+Uneven dims are fine here (GSPMD pads inside jit; DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# Distribution strategy (set by the launcher, read at trace time):
+#   tp   : batch over (pod, data); tensors over 'model' (Megatron TP)
+#   fsdp : batch over ALL axes (pure ZeRO-3); 'model' tag resolves to None
+#          (the model axis carries batch, params are gathered per layer)
+_STRATEGY = "tp"
+
+
+@contextlib.contextmanager
+def strategy(name: str):
+    global _STRATEGY
+    assert name in ("tp", "fsdp"), name
+    prev = _STRATEGY
+    _STRATEGY = name
+    try:
+        yield
+    finally:
+        _STRATEGY = prev
+
+
+def current_strategy() -> str:
+    return _STRATEGY
+
+
+def batch_axes() -> tuple:
+    return (("pod", "data", "model") if _STRATEGY == "fsdp"
+            else ("pod", "data"))
+
+
+def _current_axis_names():
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:  # pragma: no cover
+        return ()
+    if mesh is None or getattr(mesh, "empty", False):
+        return ()
+    return tuple(mesh.axis_names)
+
+
+def resolve(tag):
+    """Logical tag -> mesh axis (or None if absent from current mesh)."""
+    names = _current_axis_names()
+    if tag is None:
+        return None
+    if tag == "dp":
+        axes = tuple(a for a in batch_axes() if a in names)
+        return axes if axes else None
+    if tag == "model" and _STRATEGY == "fsdp":
+        return None  # the model axis carries batch under pure FSDP
+    if tag in names:
+        return tag
+    return None
+
+
+def shard(x, *tags):
+    names = _current_axis_names()
+    if not names:
+        return x
+    spec = P(*(resolve(t) for t in tags))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def pspec(*tags) -> P:
+    """PartitionSpec from logical tags (for boundary shardings)."""
+    return P(*(resolve(t) for t in tags))

@@ -1,0 +1,205 @@
+"""Sharding policy: PartitionSpecs for params, optimizer state, inputs and
+KV caches.
+
+Multi-bank adaptation (DESIGN.md §2): at pod scale, the paper's
+"parameterizable number of memory banks" becomes the mesh — weight matrices
+split their N (and, under FSDP, K) dimensions across ICI-connected chips so
+every GEMM draws operands from 16-512 HBM stacks in parallel.
+
+Rules (TP = 'model' axis, DP = ('pod','data')):
+  * column-parallel:  wq/wk/wv, mlp wg/wu, w_uk/w_uv, win    (None, 'model')
+  * row-parallel:     wo, mlp wd, mixer out, wout            ('model', None)
+  * expert-parallel:  moe wg/wu/wd (E leading)               ('model', ...)
+  * vocab-parallel:   embed (V, D) ('model', None); lm_head (None, 'model')
+  * SSM head-parallel: wz/wx/conv_x/mixer-norm on d_inner    ('model')
+  * small tensors (router, B/C/dt proj, norms, frontend): replicated
+  * FSDP (opt-in per arch, auto for >HBM models): extra 'data' axis on the
+    largest divisible free dim of every large leaf
+  * ZeRO-1: optimizer moments always take the FSDP treatment
+
+Every spec returned for a jit BOUNDARY divides its dim exactly (jax 0.8
+enforces this); interior constraints (hints.py) may be uneven.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as tfm
+
+_BIG = 1 << 20  # leaves above this take FSDP/ZeRO sharding
+
+
+def _dp_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _leaf_spec(path, shape) -> tuple:
+    keys = [getattr(k, "key", str(k)) for k in path]
+    name = keys[-1]
+    ctx = set(keys)
+    nd = len(shape)
+
+    if "mixer" in ctx:
+        if name in ("wz", "wx"):
+            return (None, "model")
+        if name == "conv_x":
+            return (None, "model")
+        if name == "conv_x_b":
+            return ("model",)
+        if name == "out":
+            return ("model", None)
+        if name == "scale":
+            return ("model",)
+        return (None,) * nd
+    if name in ("wg", "wu", "wd") and nd == 3:          # routed experts (EP)
+        return ("model", None, None)
+    if name in ("wq", "wk", "wv", "w_uk", "w_uv", "wg", "wu", "win"):
+        return (None, "model")
+    if name in ("bq", "bk", "bv"):
+        return ("model",)
+    if name in ("wo", "wd", "wout"):
+        return ("model", None)
+    if name == "tokens" and "embed" in ctx:
+        return ("model", None)
+    if name == "w" and "lm_head" in ctx:
+        return (None, "model")
+    return (None,) * nd
+
+
+def _add_fsdp(spec: tuple, shape: tuple, data_size: int) -> tuple:
+    """Insert 'data' into the largest free dim that divides evenly."""
+    best, best_dim = None, 0
+    for i, (s, d) in enumerate(zip(spec, shape)):
+        if s is None and d % data_size == 0 and d > best_dim:
+            best, best_dim = i, d
+    if best is None:
+        return spec
+    out = list(spec)
+    out[best] = "data"
+    return tuple(out)
+
+
+def _stack_lead(path) -> int:
+    """Leading stacked-layer dims to skip (1 for stacks, 2 for zamba super,
+    0 for top-level params)."""
+    keys = [getattr(k, "key", str(k)) for k in path]
+    if "stacks" not in [str(k) for k in keys]:
+        return 0
+    return 0  # resolved by caller via rank difference
+
+
+def _maximal_spec(shape: tuple, mesh) -> tuple:
+    """Pure-FSDP (ZeRO-3) spec: place 'model' then 'data' (and 'pod' fused
+    with 'data') on the largest divisible free dims.  Small leaves stay
+    replicated (gather cost ~0, avoids degenerate shardings)."""
+    if math.prod(shape) < 65536:
+        return (None,) * len(shape)
+    spec: list = [None] * len(shape)
+    axes = []
+    if "model" in mesh.axis_names:
+        axes.append("model")
+    if "data" in mesh.axis_names:
+        if "pod" in mesh.axis_names:
+            axes.append(("pod", "data"))
+        else:
+            axes.append("data")
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for ax in axes:
+        size = (mesh.shape[ax] if isinstance(ax, str)
+                else math.prod(mesh.shape[a] for a in ax))
+        for i in order:
+            if spec[i] is None and shape[i] % size == 0:
+                spec[i] = ax
+                break
+    return tuple(spec)
+
+
+def param_pspecs(cfg, mesh, *, fsdp: bool = False, strategy: str = "tp"):
+    """PartitionSpec pytree matching init_params(cfg) exactly.
+
+    strategy='tp' (baseline): Megatron TP rules + optional FSDP data axis.
+    strategy='fsdp': pure ZeRO-3 — every large leaf maximally sharded over
+    model+data; activations replicate (batch over all axes).
+    Stacked leaves are detected by comparing each leaf's rank with the rule's
+    expected rank: surplus leading dims get None.
+    """
+    tree = jax.eval_shape(lambda k: tfm.init_params(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+    data_size = mesh.shape.get("data", 1)
+
+    if strategy == "fsdp":
+        return jax.tree.map(lambda l: P(*_maximal_spec(l.shape, mesh)), tree)
+
+    def make(path, leaf):
+        shape = leaf.shape
+        # try rule on the trailing dims for every possible lead count
+        keys = [getattr(k, "key", str(k)) for k in path]
+        in_stack = any(str(k) == "stacks" for k in keys)
+        base = _leaf_spec(path, shape)
+        if in_stack:
+            # find lead: rule specs are written for the unstacked rank;
+            # infer unstacked rank from the rule table by name context.
+            for lead in (1, 2):
+                cand = _leaf_spec(path, shape[lead:])
+                if len(cand) == len(shape) - lead:
+                    base = (None,) * lead + cand
+                    break
+            else:
+                base = (None,) * len(shape)
+        if len(base) != len(shape):
+            base = (None,) * len(shape)
+        if fsdp and math.prod(shape) >= _BIG:
+            base = _add_fsdp(base, shape, data_size)
+        # boundary divisibility check: drop axes that don't divide
+        out = []
+        for s, d in zip(base, shape):
+            if s is None:
+                out.append(None)
+                continue
+            size = mesh.shape.get(s, 1) if isinstance(s, str) else math.prod(
+                mesh.shape.get(a, 1) for a in s)
+            out.append(s if d % size == 0 else None)
+        return P(*out)
+
+    return jax.tree_util.tree_map_with_path(make, tree)
+
+
+def zero1_pspecs(cfg, mesh, strategy: str = "tp"):
+    """Optimizer-moment shardings: params' specs + forced 'data' (ZeRO-1)."""
+    return param_pspecs(cfg, mesh, fsdp=True, strategy=strategy)
+
+
+def needs_fsdp(cfg, mesh, hbm_bytes: float = 16e9) -> bool:
+    """fp32 params + 2 fp32 moments must fit per chip after TP alone."""
+    total, _ = tfm.param_counts(cfg)
+    tp = mesh.shape.get("model", 1)
+    per_chip = total * 4 * 3 / tp
+    return per_chip > 0.5 * hbm_bytes
+
+
+def batch_pspecs(specs: dict, mesh, strategy: str = "tp") -> dict:
+    """Input shardings: batch dim over DP when divisible, else replicated."""
+    if strategy == "fsdp":
+        dp = tuple(a for a in ("pod", "data", "model")
+                   if a in mesh.axis_names)
+    else:
+        dp = _dp_axes(mesh)
+    dp_size = math.prod(mesh.shape[a] for a in dp) if dp else 1
+    out = {}
+    for k, v in specs.items():
+        if v.ndim == 0:
+            out[k] = P()
+            continue
+        b = v.shape[0]
+        lead = dp if (dp and b % dp_size == 0) else None
+        out[k] = P(lead, *([None] * (v.ndim - 1)))
+    return out
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

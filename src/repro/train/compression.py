@@ -1,0 +1,50 @@
+"""Error-feedback gradient compression (distributed-optimization trick).
+
+int8 quantization with per-tensor scale and an error-feedback accumulator:
+the quantization residual is carried into the next step, which provably
+preserves SGD convergence (Karimireddy et al., 2019).  In a deployment with
+manual collectives this runs *before* the cross-pod all-reduce, cutting DCN
+gradient traffic 4x (fp32->int8); under GSPMD the reduction is implicit, so
+here the compressor models that boundary: quantize -> (all-reduce happens on
+the int8-scaled values) -> dequantize, with the residual kept locally.
+
+The non-quantization policy (core/precision.py) applies to PARAMETERS; the
+gradient wire format is transient and does not touch stored precision.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_compress(g, err):
+    """One leaf: error-feedback int8 round trip.  Returns (g_hat, new_err)."""
+    g32 = g.astype(jnp.float32) + (err if err is not None else 0.0)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    g_hat = q.astype(jnp.float32) * scale
+    return g_hat, g32 - g_hat
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_compress_tree(grads, err_tree):
+    if err_tree is None:
+        err_tree = ef_init(grads)
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(err_tree)
+    outs = [ef_compress(g, e) for g, e in zip(flat_g, flat_e)]
+    g_hat = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_err = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return g_hat, new_err
+
+
+def topk_compress(g, k_frac: float = 0.01):
+    """Top-k magnitude sparsification (reference implementation + tests)."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    k = max(1, int(flat.size * k_frac))
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    mask = jnp.zeros_like(flat).at[idx].set(1.0)
+    return (flat * mask).reshape(g.shape)

@@ -1,0 +1,99 @@
+"""Optimizers on raw pytrees (no external deps).
+
+AdamW with decoupled weight decay + global-norm clipping, and SGD-momentum
+as the cheap baseline.  Moments are plain pytrees mirroring params, so the
+ZeRO-1 policy (sharding/policy.zero1_pspecs) applies to them directly at the
+jit boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step):
+    """Linear warmup + cosine decay (fp32 scalar)."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, tree), gn
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(cfg: AdamWConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(g, mu, nu, p):
+        g = g.astype(jnp.float32)
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mhat = mu / bc1
+        nhat = nu / bc2
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * (
+            p.astype(jnp.float32))
+        return mu, nu, (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, n, p)
+           for g, m, n, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+    new_mu = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_nu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, lr
+
+
+def sgdm_init(params):
+    return {"mom": jax.tree.map(
+        lambda p: jnp.zeros_like(p, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32)}
+
+
+def sgdm_update(grads, state, params, lr: float = 1e-2, beta: float = 0.9):
+    mom = jax.tree.map(lambda m, g: beta * m + g.astype(jnp.float32),
+                       state["mom"], grads)
+    new_p = jax.tree.map(lambda p, m: (p.astype(jnp.float32) - lr * m
+                                       ).astype(p.dtype), params, mom)
+    return new_p, {"mom": mom, "step": state["step"] + 1}

@@ -1,0 +1,45 @@
+"""Dry-run integration: one fast cell compiles end-to-end on the production
+mesh in a subprocess (the XLA host-device-count flag must be set before jax
+init, so this cannot run in the main pytest process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+from repro.launch.dryrun import lower_cell
+rec = lower_cell("qwen2-0.5b", "decode_32k")
+print("JSON" + json.dumps({k: rec[k] for k in
+      ("status", "chips", "collectives", "roofline")}))
+rec2 = lower_cell("qwen2-0.5b", "decode_32k", multi_pod=True)
+print("JSON" + json.dumps({"status": rec2["status"], "chips": rec2["chips"]}))
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_cell_single_and_multi_pod():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    recs = [json.loads(l[4:]) for l in out.stdout.splitlines()
+            if l.startswith("JSON")]
+    assert len(recs) == 2
+    assert recs[0]["status"] == "ok"
+    assert recs[0]["chips"] == 256
+    r = recs[0]["roofline"]
+    assert r["flops_per_chip"] > 0
+    assert r["dominant"] in ("compute", "memory", "collective")
+    # decode must produce flash-decoding partial-softmax collectives
+    assert recs[0]["collectives"]["total"] > 0
+    # multi-pod: the pod axis shards (512 devices)
+    assert recs[1]["status"] == "ok"
+    assert recs[1]["chips"] == 512

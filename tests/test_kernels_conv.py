@@ -1,0 +1,53 @@
+"""Direct-conv (implicit GEMM) kernel vs jax.lax.conv oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.conv_direct import conv2d_direct
+
+
+def _oracle(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w, (1, 1), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        precision=jax.lax.Precision.HIGHEST)
+
+
+CASES = [
+    # B, H, W, Cin, KH, KW, Cout, th
+    (2, 16, 16, 3, 3, 3, 8, 7),     # OH=14, ragged bands (7x2)
+    (1, 10, 12, 4, 1, 1, 16, 8),    # 1x1 conv
+    (2, 12, 9, 2, 5, 3, 4, 4),      # asymmetric kernel
+    (1, 9, 9, 8, 3, 3, 8, 8),       # th > OH (clamped)
+]
+
+
+@pytest.mark.parametrize("b,h,w_,cin,kh,kw,cout,th", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_conv_direct_matches_lax(b, h, w_, cin, kh, kw, cout, th, dtype):
+    kx, kw_ = jax.random.split(jax.random.PRNGKey(h * 7 + kh))
+    x = jax.random.normal(kx, (b, h, w_, cin), jnp.float32).astype(dtype)
+    w = (jax.random.normal(kw_, (kh, kw, cin, cout), jnp.float32) * 0.2
+         ).astype(dtype)
+    got = conv2d_direct(x, w, th=th, interpret=True)
+    want = _oracle(x.astype(jnp.float32), w.astype(jnp.float32))
+    assert got.shape == want.shape
+    tol = 2e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_conv_direct_same_padding_composes():
+    """'SAME' conv = pad outside + VALID kernel (how darknet layers use it)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 8, 3), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 3, 6),
+                          jnp.float32) * 0.2
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    got = conv2d_direct(xp, w, th=8, interpret=True)
+    want = jax.lax.conv_general_dilated(
+        x, w, (1, 1), [(1, 1), (1, 1)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        precision=jax.lax.Precision.HIGHEST)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,61 @@
+"""Flash-attention kernel vs pure-jnp oracle (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+
+
+def _mk(key, b, sq, skv, h, d, dtype):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, sq, h, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(kk, (b, skv, h, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(kv, (b, skv, h, d), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+def _kernel_layout(x):
+    # (B, S, H, D) -> (B*H, S, D)
+    b, s, h, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+
+
+def _back(x, b, h):
+    bh, s, d = x.shape
+    return x.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+CASES = [
+    # b, sq, skv, h, d, causal
+    (1, 128, 128, 2, 64, True),
+    (2, 256, 256, 1, 128, True),
+    (1, 128, 256, 2, 64, True),    # right-aligned causal (q shorter than kv)
+    (1, 128, 128, 2, 64, False),
+    (2, 512, 512, 1, 64, True),
+]
+
+
+@pytest.mark.parametrize("b,sq,skv,h,d,causal", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_oracle(b, sq, skv, h, d, causal, dtype):
+    q, k, v = _mk(jax.random.PRNGKey(sq + skv + h), b, sq, skv, h, d, dtype)
+    got = _back(flash_attention(_kernel_layout(q), _kernel_layout(k),
+                                _kernel_layout(v), causal=causal,
+                                bq=128, bk=128, interpret=True), b, h)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_block_shape_independence():
+    """Output must not depend on (bq, bk) tiling."""
+    q, k, v = _mk(jax.random.PRNGKey(0), 1, 256, 256, 2, 64, jnp.float32)
+    ql, kl, vl = map(_kernel_layout, (q, k, v))
+    a = flash_attention(ql, kl, vl, bq=64, bk=64, interpret=True)
+    b_ = flash_attention(ql, kl, vl, bq=256, bk=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                               rtol=2e-5, atol=2e-5)

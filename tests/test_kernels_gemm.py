@@ -1,0 +1,101 @@
+"""Kernel-vs-oracle validation for the GEMM compute engine.
+
+Per harness requirement: sweep shapes/dtypes in interpret mode and
+assert_allclose against the pure-jnp oracle in ref.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.common import ACTIVATIONS
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+SHAPES = [
+    (8, 8, 8),            # tiny, heavy padding
+    (128, 128, 128),      # exactly one block
+    (256, 512, 256),      # default block shape
+    (200, 300, 100),      # ragged: every dim padded
+    (1, 4096, 64),        # vector-matrix
+    (512, 64, 1024),      # skinny K
+]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_matches_oracle(m, k, n, dtype):
+    kx, kw = jax.random.split(jax.random.PRNGKey(m * 31 + k * 7 + n))
+    x, w = _rand(kx, (m, k), dtype), _rand(kw, (k, n), dtype)
+    got = ops.matmul(x, w, interpret=True)
+    want = ref.matmul_ref(x, w)
+    tol = 2e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("act", ACTIVATIONS)
+def test_gemm_fused_epilogue(act):
+    key = jax.random.PRNGKey(0)
+    kx, kw, ks, kb = jax.random.split(key, 4)
+    m, k, n = 96, 160, 224
+    x, w = _rand(kx, (m, k), jnp.float32), _rand(kw, (k, n), jnp.float32)
+    scale = _rand(ks, (n,), jnp.float32)
+    shift = _rand(kb, (n,), jnp.float32)
+    got = ops.matmul(x, w, scale, shift, act=act, interpret=True)
+    want = ref.matmul_ref(x, w, scale=scale, shift=shift, act=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_gemm_fp32_strict_is_exactly_xla_dot():
+    # Non-quantization invariant: fp32 engine output == fp32 XLA dot output
+    # bit-for-bit is too strong across reduction orders, but 1e-6 rel holds.
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (128, 256), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(4), (256, 128), jnp.float32)
+    got = ops.matmul(x, w, interpret=True)
+    want = x @ w
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("b,m,k,n", [(2, 64, 64, 64), (3, 100, 70, 130),
+                                     (1, 256, 256, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bmm_matches_oracle(b, m, k, n, dtype):
+    kx, kw = jax.random.split(jax.random.PRNGKey(b * 97 + m))
+    x, w = _rand(kx, (b, m, k), dtype), _rand(kw, (b, k, n), dtype)
+    got = ops.bmm(x, w, interpret=True)
+    want = ref.bmm_ref(x, w)
+    tol = 2e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 96), k=st.integers(1, 96), n=st.integers(1, 96),
+       use_scale=st.booleans(), use_shift=st.booleans(),
+       act=st.sampled_from(ACTIVATIONS))
+def test_gemm_property_any_shape(m, k, n, use_scale, use_shift, act):
+    """Property: engine == oracle for arbitrary shapes + epilogue combos."""
+    key = jax.random.PRNGKey(m * 10007 + k * 101 + n)
+    kx, kw, ks, kb = jax.random.split(key, 4)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+    scale = jax.random.normal(ks, (n,), jnp.float32) if use_scale else None
+    shift = jax.random.normal(kb, (n,), jnp.float32) if use_shift else None
+    got = ops.matmul(x, w, scale, shift, act=act, interpret=True)
+    want = ref.matmul_ref(x, w, scale=scale, shift=shift, act=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)

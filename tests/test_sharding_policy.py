@@ -1,0 +1,139 @@
+"""Sharding-policy invariants (single-device: pure spec-level checks)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_arch, input_specs
+from repro.models import transformer as tfm
+from repro.serve import kvcache
+from repro.sharding import policy
+
+
+class FakeMesh:
+    """Shape-only stand-in (policy only reads .shape / .axis_names)."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+        self.size = math.prod(shape.values())
+
+
+MESH1 = FakeMesh({"data": 16, "model": 16})
+MESH2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _axis_size(mesh, ax):
+    if ax is None:
+        return 1
+    if isinstance(ax, (tuple, list)):
+        return math.prod(mesh.shape[a] for a in ax)
+    return mesh.shape[ax]
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+@pytest.mark.parametrize("mesh", [MESH1, MESH2], ids=["1pod", "2pod"])
+def test_param_specs_divide_exactly(arch_id, mesh):
+    """Boundary rule: every sharded dim divides exactly (jax 0.8 enforces)."""
+    cfg = get_arch(arch_id)
+    tree = jax.eval_shape(lambda k: tfm.init_params(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+    for fsdp in (False, True):
+        specs = policy.param_pspecs(cfg, mesh, fsdp=fsdp)
+        leaves = jax.tree_util.tree_leaves_with_path(tree)
+        spec_leaves = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        assert len(leaves) == len(spec_leaves)
+        for (path, leaf), spec in zip(leaves, spec_leaves):
+            assert len(spec) <= len(leaf.shape), (path, spec, leaf.shape)
+            for dim, ax in zip(leaf.shape, tuple(spec)):
+                size = _axis_size(mesh, ax)
+                assert dim % size == 0, (
+                    f"{jax.tree_util.keystr(path)}: {leaf.shape} vs {spec}")
+
+
+@pytest.mark.parametrize("arch_id", ["phi3-medium-14b", "qwen2-1.5b",
+                                     "deepseek-v2-lite-16b"])
+def test_big_params_actually_sharded(arch_id):
+    """TP must shard the big matrices, not replicate them."""
+    cfg = get_arch(arch_id)
+    specs = policy.param_pspecs(cfg, MESH1, fsdp=False)
+    tree = jax.eval_shape(lambda k: tfm.init_params(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+    total_repl = 0
+    total = 0
+    for leaf, spec in zip(
+            jax.tree_util.tree_leaves(tree),
+            jax.tree_util.tree_leaves(specs,
+                                      is_leaf=lambda x: isinstance(x, P))):
+        n = math.prod(leaf.shape)
+        total += n
+        if all(a is None for a in tuple(spec)):
+            total_repl += n
+    assert total_repl / total < 0.15, (
+        f"{arch_id}: {total_repl/total:.1%} of params replicated")
+
+
+def test_fsdp_added_on_divisible_dim():
+    cfg = get_arch("llama4-scout-17b-a16e")
+    assert policy.needs_fsdp(cfg, MESH1)
+    specs = policy.param_pspecs(cfg, MESH1, fsdp=True)
+    flat = jax.tree_util.tree_leaves(specs,
+                                     is_leaf=lambda x: isinstance(x, P))
+    def has_data(spec):
+        for ax in tuple(spec):
+            if ax == "data" or (isinstance(ax, (tuple, list))
+                                and "data" in ax):
+                return True
+        return False
+
+    n_data = sum(1 for s in flat if has_data(s))
+    assert n_data > 5  # the big leaves picked up a data axis
+
+
+def test_small_archs_dont_need_fsdp():
+    assert not policy.needs_fsdp(get_arch("qwen2-0.5b"), MESH1)
+    assert not policy.needs_fsdp(get_arch("qwen2-1.5b"), MESH1)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+@pytest.mark.parametrize("shape_id", list(SHAPES))
+def test_batch_specs_divide(arch_id, shape_id):
+    cfg, shape = get_arch(arch_id), SHAPES[shape_id]
+    specs = input_specs(cfg, shape)
+    bspecs = policy.batch_pspecs(specs, MESH2)
+    for k, v in specs.items():
+        spec = bspecs[k]
+        if v.ndim == 0:
+            assert tuple(spec) == ()
+            continue
+        ax = tuple(spec)[0]
+        assert v.shape[0] % _axis_size(MESH2, ax) == 0
+
+
+@pytest.mark.parametrize("arch_id", ["qwen2-1.5b", "deepseek-v2-lite-16b",
+                                     "zamba2-7b", "mamba2-1.3b"])
+def test_cache_specs_divide(arch_id):
+    cfg = get_arch(arch_id)
+    for B, S in [(128, 32768), (1, 524288)]:
+        structs = kvcache.cache_struct(cfg, B, S)
+        specs = kvcache.cache_pspecs(cfg, MESH1, B, S)
+        for leaf, spec in zip(
+                jax.tree_util.tree_leaves(structs),
+                jax.tree_util.tree_leaves(
+                    specs, is_leaf=lambda x: isinstance(x, P))):
+            for dim, ax in zip(leaf.shape, tuple(spec)):
+                assert dim % _axis_size(MESH1, ax) == 0, (
+                    arch_id, leaf.shape, spec)
+
+
+def test_long500k_seq_spread_over_both_axes():
+    cfg = get_arch("zamba2-7b")
+    specs = kvcache.cache_pspecs(cfg, MESH1, 1, 524288)
+    flat = jax.tree_util.tree_leaves(specs,
+                                     is_leaf=lambda x: isinstance(x, P))
+    spread = [s for s in flat for ax in tuple(s)
+              if isinstance(ax, tuple) and "model" in ax]
+    assert spread, "524288-seq cache should shard over data AND model"

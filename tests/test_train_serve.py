@@ -1,0 +1,181 @@
+"""Training-step behaviour (loss decreases, microbatch equivalence,
+compression) and serve-side cache structure consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch, reduced
+from repro.core.engine import make_engine
+from repro.models import transformer as tfm
+from repro.serve import kvcache
+from repro.serve.serve_step import make_decode_step, make_prefill_step
+from repro.train import optimizer as opt
+from repro.train.compression import ef_compress, ef_compress_tree
+from repro.train.train_step import make_train_step
+
+ENGINE = make_engine("xla", "fp32_strict")
+
+
+def _tiny_cfg():
+    return reduced(get_arch("qwen2-0.5b"))
+
+
+def _batch(cfg, B=4, S=32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    toks = jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size)
+    labels = jnp.concatenate([toks[:, 1:], toks[:, :1]], axis=1)
+    return {"tokens": toks, "labels": labels}
+
+
+def test_loss_decreases_over_steps():
+    cfg = _tiny_cfg()
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    ocfg = opt.AdamWConfig(lr=1e-3, warmup_steps=2, decay_steps=100)
+    step = jax.jit(make_train_step(ENGINE, cfg, ocfg, ce_chunk=32,
+                                   n_q_chunks=4))
+    state = opt.adamw_init(params)
+    batch = _batch(cfg)  # overfit a single batch
+    losses = []
+    for _ in range(8):
+        params, state, metrics = step(params, state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses
+    assert np.isfinite(losses).all()
+
+
+def test_microbatch_equivalence():
+    """M microbatches give the same grads as one big batch (linearity)."""
+    cfg = _tiny_cfg()
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    ocfg = opt.AdamWConfig()
+    batch = _batch(cfg, B=4)
+    s1 = make_train_step(ENGINE, cfg, ocfg, num_microbatches=1,
+                         ce_chunk=32, n_q_chunks=4)
+    s2 = make_train_step(ENGINE, cfg, ocfg, num_microbatches=2,
+                         ce_chunk=32, n_q_chunks=4)
+    st = opt.adamw_init(params)
+    p1, _, m1 = jax.jit(s1)(params, st, batch)
+    p2, _, m2 = jax.jit(s2)(params, st, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=5e-5)
+
+
+def test_ef_compression_roundtrip_and_error_feedback():
+    g = jax.random.normal(jax.random.PRNGKey(0), (256,), jnp.float32)
+    g_hat, err = ef_compress(g, None)
+    # quantization error bounded by scale/2
+    scale = float(jnp.max(jnp.abs(g))) / 127.0
+    assert float(jnp.max(jnp.abs(g - g_hat))) <= scale * 0.51
+    # error feedback: accumulated compressed signal converges to true sum
+    total_hat = jnp.zeros_like(g)
+    err = None
+    for _ in range(50):
+        g_hat, err = ef_compress(g, err)
+        total_hat = total_hat + g_hat
+    np.testing.assert_allclose(np.asarray(total_hat / 50), np.asarray(g),
+                               atol=scale)
+
+
+def test_compressed_training_still_converges():
+    cfg = _tiny_cfg()
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    ocfg = opt.AdamWConfig(lr=1e-3, warmup_steps=2, decay_steps=100)
+    step = jax.jit(make_train_step(ENGINE, cfg, ocfg, ce_chunk=32,
+                                   n_q_chunks=4, grad_compression=True))
+    state = opt.adamw_init(params)
+    from repro.train.compression import ef_init
+    err = ef_init(params)
+    batch = _batch(cfg)
+    losses = []
+    for _ in range(8):
+        params, state, err, metrics = step(params, state, batch, err)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.3, losses
+
+
+def test_lr_schedule_shape():
+    ocfg = opt.AdamWConfig(lr=1.0, warmup_steps=10, decay_steps=110,
+                           min_lr_ratio=0.1)
+    lrs = [float(opt.schedule(ocfg, jnp.array(s))) for s in
+           [0, 5, 10, 60, 110, 200]]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 0.5) < 1e-6
+    assert abs(lrs[2] - 1.0) < 1e-6
+    assert 0.1 < lrs[3] < 1.0
+    assert abs(lrs[4] - 0.1) < 1e-6
+    assert abs(lrs[5] - 0.1) < 1e-6
+
+
+DECODE_ARCHS = ["qwen2-0.5b", "deepseek-v2-lite-16b", "mamba2-1.3b",
+                "zamba2-7b"]
+
+
+@pytest.mark.parametrize("arch_id", DECODE_ARCHS)
+def test_cache_struct_matches_prefill(arch_id):
+    """kvcache.cache_struct must structurally equal forward_prefill's."""
+    cfg = reduced(get_arch(arch_id))
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 64
+    batch = _batch(cfg, B, S)
+    prefill = make_prefill_step(ENGINE, cfg, n_q_chunks=4)
+    _, caches = jax.eval_shape(prefill, params, batch)
+    want = kvcache.cache_struct(cfg, B, S, jnp.float32)
+    got_td = jax.tree_util.tree_structure(caches)
+    want_td = jax.tree_util.tree_structure(want)
+    assert got_td == want_td, f"{arch_id}:\n{got_td}\nvs\n{want_td}"
+    got_shapes = [l.shape for l in jax.tree_util.tree_leaves(caches)]
+    want_shapes = [l.shape for l in jax.tree_util.tree_leaves(want)]
+    assert got_shapes == want_shapes, arch_id
+
+
+@pytest.mark.parametrize("arch_id", ["qwen2-0.5b", "mamba2-1.3b"])
+def test_decode_from_cache_init(arch_id):
+    """decode_step accepts cache_init-built caches (serve-from-scratch)."""
+    cfg = reduced(get_arch(arch_id))
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    B, S_max = 2, 32
+    caches = kvcache.cache_init(cfg, B, S_max)
+    decode = jax.jit(make_decode_step(ENGINE, cfg))
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, caches = decode(params, caches, tok, jnp.array(0, jnp.int32))
+    assert logits.shape == (B, 1, cfg.vocab_padded)
+    assert np.all(np.isfinite(np.asarray(logits[..., :cfg.vocab_size])))
+
+
+@pytest.mark.parametrize("arch_id", ["qwen2-0.5b", "deepseek-v2-lite-16b",
+                                     "zamba2-7b"])
+def test_incremental_decode_matches_forward(arch_id):
+    """Token-by-token decode from an empty cache == full forward.
+
+    For deepseek this validates the absorbed-matmul MLA decode against the
+    materialized-KV prefill formulation; for zamba2 the shared-block KV path
+    interleaved with mamba state decode.
+    """
+    cfg = reduced(get_arch(arch_id))
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0,
+                              cfg.vocab_size)
+    caches = kvcache.cache_init(cfg, B, S)
+    decode = jax.jit(make_decode_step(ENGINE, cfg))
+    logits_steps = []
+    for t in range(S):
+        logits_t, caches = decode(params, caches, toks[:, t:t + 1],
+                                  jnp.array(t, jnp.int32))
+        logits_steps.append(logits_t[:, 0])
+    got = jnp.stack(logits_steps, axis=1)          # (B, S, V)
+    h, _ = tfm.forward_hidden(ENGINE, cfg, params, tokens=toks,
+                              remat=False, n_q_chunks=4)
+    from repro.models.common import lm_head_logits
+    w = tfm.head_weight(params, cfg)
+    want = lm_head_logits(ENGINE, h, w, vocab_real=cfg.vocab_size)
+    np.testing.assert_allclose(
+        np.asarray(got[..., :cfg.vocab_size]),
+        np.asarray(want[..., :cfg.vocab_size]), rtol=2e-2, atol=2e-2)
