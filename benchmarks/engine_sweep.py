@@ -2,7 +2,9 @@
 spot; 'results with different dimensions are fully in line').
 
 Measures the XLA-backend engine on CPU across shapes and validates the
-Pallas kernel against the oracle at every shape; derives modeled v5e times.
+Pallas-backend engine against it at every shape (both resolve through the
+backend registry); derives modeled v5e times and reports the autotune
+block-pick cache behaviour across the sweep.
 """
 from __future__ import annotations
 
@@ -12,8 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import make_engine
-from repro.kernels import ops, ref
+from repro.core import backends, make_engine
 
 SHAPES = [
     (2048, 4096, 16384),   # the paper's headline
@@ -35,20 +36,26 @@ def _time(fn, reps=3):
 def run() -> list[tuple[str, float, str]]:
     rows = []
     eng = make_engine("xla", "fp32_strict")
+    eng_pallas = make_engine("pallas", "fp32_strict")
     rng = np.random.default_rng(1)
+    stats0 = backends.cache_stats()
     for (m, k, n) in SHAPES:
         a = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
         b = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
         f = jax.jit(lambda x, y: eng.matmul(x, y, act="leaky"))
         t = _time(lambda: jax.block_until_ready(f(a, b)))
         gf = 2.0 * m * k * n / t / 1e9
-        # kernel correctness at this shape (subsampled for big shapes)
+        # kernel correctness at this shape (subsampled for big shapes):
+        # pallas-backend engine vs xla-backend engine, both via registry.
         ms, ks, ns = min(m, 256), min(k, 512), min(n, 512)
-        got = ops.matmul(a[:ms, :ks], b[:ks, :ns], act="leaky",
-                         interpret=True)
-        want = ref.matmul_ref(a[:ms, :ks], b[:ks, :ns], act="leaky")
+        got = eng_pallas.matmul(a[:ms, :ks], b[:ks, :ns], act="leaky")
+        want = eng.matmul(a[:ms, :ks], b[:ks, :ns], act="leaky")
         err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
                                     - want.astype(jnp.float32))))
         rows.append((f"engine_sweep/{m}x{k}x{n}", t * 1e6,
                      f"GFLOPS={gf:.1f} kernel_err={err:.1e}"))
+    stats = backends.cache_stats()
+    rows.append(("engine_sweep/autotune_cache", 0.0,
+                 f"hits={stats['hits'] - stats0['hits']} "
+                 f"misses={stats['misses'] - stats0['misses']}"))
     return rows

@@ -79,11 +79,13 @@ def run() -> list[tuple[str, float, str]]:
     gf_cpu = FLOPS / t_cpu / 1e9
     rows.append(("figure3/cpu_xla", t_cpu * 1e6, f"GFLOPS={gf_cpu:.2f}"))
 
-    # --- engine correctness (pallas interpret on a slice) ---
-    from repro.kernels import ops, ref
+    # --- engine correctness (pallas interpret on a slice, via registry) ---
+    from repro.core import make_engine
+    eng_p = make_engine("pallas", "fp32_strict")
+    eng_x = make_engine("xla", "fp32_strict")
     sa, sb = xa[:256, :512], xb[:512, :1024]
-    got = ops.matmul(sa, sb, interpret=True)
-    want = ref.matmul_ref(sa, sb)
+    got = eng_p.matmul(sa, sb)
+    want = eng_x.matmul(sa, sb)
     err = float(jnp.max(jnp.abs(got - want)))
     rows.append(("figure3/engine_pallas_validate", 0.0,
                  f"max_err={err:.2e}"))

@@ -1,7 +1,7 @@
 """Quickstart: the paper's compute engine in 30 lines.
 
-1. Run a fused FP32 GEMM on the engine (both backends).
-2. Build a Darknet CNN from a cfg string and run inference.
+1. Run a fused FP32 GEMM on the engine (every backend in the registry).
+2. Build a Darknet CNN from a cfg string, compile once, run inference.
 3. Run one LM training step on a reduced architecture.
 
     PYTHONPATH=src python examples/quickstart.py
@@ -12,10 +12,13 @@ import jax.numpy as jnp
 from repro.configs.base import get_arch, reduced
 from repro.configs.darknet_ref import DARKNET_SMALL_CFG
 from repro.core.darknet.network import Network
-from repro.core.engine import make_engine
+from repro.core import list_backends, make_engine
 from repro.models import transformer as tfm
 
 # --- 1. the engine: fused act((x@w)*scale+shift), fp32 strict -------------
+# Backends resolve through the op registry; add your own with
+# repro.core.register_backend (see docs/engine_api.md).
+print(f"registered backends: {list_backends()}")
 engine_xla = make_engine("xla", "fp32_strict")
 engine_pallas = make_engine("pallas", "fp32_strict")  # TPU-target kernel
 x = jax.random.normal(jax.random.PRNGKey(0), (200, 300), jnp.float32)
@@ -25,13 +28,14 @@ y1 = engine_xla.matmul(x, w, shift=bias, act="leaky")
 y2 = engine_pallas.matmul(x, w, shift=bias, act="leaky")
 print(f"engine backends agree: {jnp.max(jnp.abs(y1 - y2)):.2e}")
 
-# --- 2. the paper's use-case: Darknet CNN on the engine -------------------
+# --- 2. the paper's use-case: Darknet CNN, compiled once ------------------
 net = Network(DARKNET_SMALL_CFG, engine_xla)
 params = net.init(jax.random.PRNGKey(2))
 img = jax.random.normal(jax.random.PRNGKey(3), (4, 28, 28, 3), jnp.float32)
-probs = jax.jit(net.apply)(params, img)
+compiled = net.compile(params, batch_size=4)       # ONE jit trace
+probs = compiled(img)
 print(f"darknet CNN: input {img.shape} -> class probs {probs.shape}, "
-      f"sum={probs.sum(-1)[0]:.4f}")
+      f"sum={probs.sum(-1)[0]:.4f}, engine plan={compiled.op_counts}")
 
 # --- 3. the substrate: one LM train step (reduced qwen2) ------------------
 cfg = reduced(get_arch("qwen2-0.5b"))

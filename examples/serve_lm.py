@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import get_arch, reduced
-from repro.core.engine import make_engine
+from repro.core import make_engine
 from repro.models import transformer as tfm
 from repro.serve import kvcache
 from repro.serve.serve_step import (greedy_sample, make_decode_step,

@@ -1,3 +1,15 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Public compute-engine API.
+
+The paper's contribution as a package surface: one `ComputeEngine` serving
+every dense layer, backed by a backend/op registry (`backends.py`) and the
+non-quantization precision contract (`precision.py`).  Import from here:
+
+    from repro.core import ComputeEngine, make_engine, register_backend
+"""
+from repro.core.backends import (OP_SET, get_backend, list_backends,
+                                 register_backend)
+from repro.core.engine import ComputeEngine, make_engine
+from repro.core.precision import Precision
+
+__all__ = ["ComputeEngine", "make_engine", "Precision", "OP_SET",
+           "register_backend", "get_backend", "list_backends"]

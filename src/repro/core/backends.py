@@ -1,0 +1,306 @@
+"""Backend/op registry for the compute engine.
+
+The paper's claim is that ONE full-precision compute engine serves every
+dense layer of a CNN (conv-as-im2col, FC, deconv) across a heterogeneous
+system.  This module is the software form of that claim: a fixed op set
+(`OP_SET`) that every backend must implement, a `register_backend` /
+`get_backend` API so new execution targets plug in without touching
+`ComputeEngine`, and a per-process autotune cache so block-shape picks are
+made once per (op, shapes, dtype, backend) and reused across traces.
+
+Built-in backends:
+
+  pallas : the TPU-target kernels (kernels/gemm.py, flash_attention.py) with
+           explicit VMEM BlockSpec tiling — interpret=True runs them on CPU.
+  xla    : jax.lax dot_general / jnp formulations with the same precision
+           policy and the same fused epilogue, expressed so XLA fuses them.
+
+A third backend (`ref`, the pure-jnp oracles in kernels/ref.py) registers
+through the public API in the test suite — the reference example of adding a
+backend; see docs/engine_api.md.
+
+Op contract (all impls are pure functions called at trace time; `ctx` is an
+`OpContext` carrying the engine's precision policy, interpret flag and the
+tile plan resolved from the autotune cache):
+
+  matmul(x, w, scale, shift, *, act, out_dtype, ctx)   (M,K)@(K,N) -> (M,N)
+      fused epilogue act((x @ w) * scale + shift), scale/shift (N,) or None,
+      fp32 accumulation.
+  bmm(x, w, *, out_dtype, ctx)                         (B,M,K)@(B,K,N)
+  conv2d(x, w, scale, shift, *, size, stride, pad, act, out_dtype, ctx)
+      NHWC x, flattened (kh*kw*Cin, Cout) w, same fused epilogue — one
+      engine invocation per conv+BN+act layer.
+  attention(q, k, v, *, causal, sm_scale, ctx)         (B,S,H,D) in/out
+      softmax(q k^T / sqrt(D)) v with fp32 softmax statistics.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import Precision
+from repro.kernels import flash_attention as flash_kernel
+from repro.kernels import ops as kernel_ops
+from repro.kernels.common import apply_act, im2col
+
+OP_SET = ("matmul", "bmm", "conv2d", "attention")
+
+
+@dataclasses.dataclass(frozen=True)
+class OpContext:
+    """Per-dispatch context handed to backend op implementations."""
+    precision: Precision
+    interpret: bool = True
+    tiles: tuple = ()  # (bm, bk, bn) for tiled backends, () otherwise
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    name: str
+    ops: Mapping[str, Callable]
+    # Optional block-shape heuristic: (op, shapes, dtype) -> tuple.  Results
+    # are memoized in the process-wide autotune cache.
+    tile_picker: Callable[[str, tuple, Any], tuple] | None = None
+
+    def op(self, name: str) -> Callable:
+        try:
+            return self.ops[name]
+        except KeyError:
+            raise NotImplementedError(
+                f"backend {self.name!r} does not implement op {name!r} "
+                f"(has: {sorted(self.ops)})") from None
+
+    def tiles(self, op: str, shapes: tuple, dtype) -> tuple:
+        if self.tile_picker is None:  # untiled backend: skip the cache
+            return ()
+        return tile_plan(op, shapes, dtype, self.name, self.tile_picker)
+
+
+_REGISTRY: dict[str, Backend] = {}
+
+
+def register_backend(name: str, ops: Mapping[str, Callable], *,
+                     tile_picker=None, overwrite: bool = False) -> Backend:
+    """Register a backend implementing (a subset of) OP_SET.
+
+    `ops` maps op name -> impl following the op contract above.  Unknown op
+    names are rejected so typos fail at registration, not dispatch.
+    """
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    unknown = set(ops) - set(OP_SET)
+    if unknown:
+        raise ValueError(f"unknown ops {sorted(unknown)}; op set is {OP_SET}")
+    be = Backend(name=name, ops=dict(ops), tile_picker=tile_picker)
+    _REGISTRY[name] = be
+    return be
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown backend {name!r}; registered: "
+                         f"{list_backends()}") from None
+
+
+def list_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def unregister_backend(name: str) -> None:
+    _REGISTRY.pop(name, None)
+
+
+# ------------------------------------------------------- autotune cache ---
+# Block-shape picks are pure functions of (op, shapes, dtype, backend); the
+# heuristic walks a VMEM-budget loop, so memoize it process-wide.  Stats are
+# observable so benchmarks/tests can assert cache behaviour.
+
+_TILE_CACHE: dict[tuple, tuple] = {}
+_TILE_STATS = collections.Counter()
+
+
+def tile_plan(op: str, shapes: tuple, dtype, backend: str,
+              picker: Callable[[str, tuple, Any], tuple]) -> tuple:
+    """Memoized block-shape pick keyed on (op, shapes, dtype, backend)."""
+    key = (op, shapes, str(jnp.dtype(dtype)), backend)
+    hit = _TILE_CACHE.get(key)
+    if hit is not None:
+        _TILE_STATS["hits"] += 1
+        return hit
+    _TILE_STATS["misses"] += 1
+    plan = tuple(picker(op, shapes, dtype))
+    _TILE_CACHE[key] = plan
+    return plan
+
+
+def cache_stats() -> dict[str, int]:
+    return {"hits": _TILE_STATS["hits"], "misses": _TILE_STATS["misses"],
+            "entries": len(_TILE_CACHE)}
+
+
+def clear_tile_cache() -> None:
+    _TILE_CACHE.clear()
+    _TILE_STATS.clear()
+
+
+# ------------------------------------------------------ dispatch counts ---
+# Incremented at trace time by ComputeEngine — under jit each compiled
+# program pays them exactly once, so a snapshot diff around a trace is the
+# static op plan of that program (CompiledNetwork.profile reports it).
+
+_DISPATCH = collections.Counter()
+
+
+def record_dispatch(backend: str, op: str) -> None:
+    _DISPATCH[(backend, op)] += 1
+
+
+def dispatch_counts() -> dict[tuple[str, str], int]:
+    return dict(_DISPATCH)
+
+
+def counts_since(snapshot: Mapping[tuple[str, str], int]
+                 ) -> dict[tuple[str, str], int]:
+    out = {k: v - snapshot.get(k, 0) for k, v in _DISPATCH.items()}
+    return {k: v for k, v in out.items() if v}
+
+
+def reset_dispatch_counts() -> None:
+    _DISPATCH.clear()
+
+
+# --------------------------------------------------------- shared pieces ---
+
+def im2col_conv2d(matmul_impl: Callable) -> Callable:
+    """Build a conv2d op from a matmul op via materialized im2col — the
+    paper's canonical conv lowering.  Backend authors with a direct conv
+    kernel can register their own conv2d instead (see kernels/conv_direct)."""
+
+    def conv2d(x, w, scale, shift, *, size, stride, pad, act, out_dtype,
+               ctx):
+        cols = im2col(x, size, size, stride, pad)     # (B, OH, OW, khkwC)
+        b, oh, ow, _ = cols.shape
+        y = matmul_impl(cols.reshape(b * oh * ow, -1), w, scale, shift,
+                        act=act, out_dtype=out_dtype, ctx=ctx)
+        return y.reshape(b, oh, ow, -1)
+
+    return conv2d
+
+
+def _attention_tiles(s: int) -> int:
+    """Largest power-of-two block <= 256 dividing s (flash kernel requires
+    the sequence to tile exactly; engine pads are not needed for the block
+    sizes the models use)."""
+    for b in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if s % b == 0:
+            return b
+    return 1
+
+
+# ------------------------------------------------------- pallas backend ---
+
+def _pallas_matmul(x, w, scale, shift, *, act, out_dtype, ctx):
+    bm, bk, bn = ctx.tiles or (0, 0, 0)
+    return kernel_ops.matmul(x, w, scale, shift, act=act,
+                             out_dtype=out_dtype, bm=bm, bk=bk, bn=bn,
+                             interpret=ctx.interpret)
+
+
+def _pallas_bmm(x, w, *, out_dtype, ctx):
+    bm, bk, bn = ctx.tiles or (0, 0, 0)
+    return kernel_ops.bmm(x, w, out_dtype=out_dtype, bm=bm, bk=bk, bn=bn,
+                          interpret=ctx.interpret)
+
+
+def _pallas_attention(q, k, v, *, causal, sm_scale, ctx):
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, Skv, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, Skv, D)
+    o = flash_kernel.flash_attention(
+        qf, kf, vf, causal=causal, sm_scale=sm_scale,
+        bq=_attention_tiles(Sq), bk=_attention_tiles(Skv),
+        interpret=ctx.interpret)
+    return o.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+
+
+def _pallas_tile_picker(op: str, shapes: tuple, dtype) -> tuple:
+    if op in ("matmul", "bmm"):
+        m, k, n = shapes[-3:]
+        bm, bk, bn = kernel_ops.pick_blocks(m, k, n, dtype)
+        if op == "bmm":
+            bm, bk, bn = min(bm, 128), min(bk, 256), min(bn, 128)
+        return (bm, bk, bn)
+    if op == "conv2d":
+        (b, h, w, c), n, size, stride, pad = shapes
+        oh = (h + 2 * pad - size) // stride + 1
+        ow = (w + 2 * pad - size) // stride + 1
+        return kernel_ops.pick_blocks(b * oh * ow, size * size * c, n, dtype)
+    return ()
+
+
+# ---------------------------------------------------------- xla backend ---
+
+def _xla_matmul(x, w, scale, shift, *, act, out_dtype, ctx):
+    # Same math as the Pallas kernel, fused by XLA.  Emission dtype =
+    # precision.reduce_dtype (see core/precision.py): f32 under fp32_strict;
+    # bf16 under mixed so row-parallel partial-sum all-reduces ride the wire
+    # at half width.
+    prec = ctx.precision
+    rdt = prec.reduce_dtype
+    acc = jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=rdt, precision=prec.lax_precision)
+    if scale is not None:
+        acc = acc * scale.astype(rdt)
+    if shift is not None:
+        acc = acc + shift.astype(rdt)
+    return apply_act(acc, act).astype(out_dtype)
+
+
+def _xla_bmm(x, w, *, out_dtype, ctx):
+    acc = jnp.einsum("bmk,bkn->bmn", x, w,
+                     preferred_element_type=jnp.float32,
+                     precision=ctx.precision.lax_precision)
+    return acc.astype(out_dtype)
+
+
+def _xla_attention(q, k, v, *, causal, sm_scale, ctx):
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    if sm_scale is None:
+        sm_scale = 1.0 / (D ** 0.5)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32),
+                   precision=ctx.precision.lax_precision) * sm_scale
+    if causal:
+        qi = jnp.arange(Sq)[:, None] + (Skv - Sq)
+        kj = jnp.arange(Skv)[None, :]
+        s = jnp.where((kj <= qi)[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32),
+                   precision=ctx.precision.lax_precision)
+    return o.astype(q.dtype)
+
+
+register_backend("pallas", {
+    "matmul": _pallas_matmul,
+    "bmm": _pallas_bmm,
+    "conv2d": im2col_conv2d(_pallas_matmul),
+    "attention": _pallas_attention,
+}, tile_picker=_pallas_tile_picker)
+
+register_backend("xla", {
+    "matmul": _xla_matmul,
+    "bmm": _xla_bmm,
+    "conv2d": im2col_conv2d(_xla_matmul),
+    "attention": _xla_attention,
+})

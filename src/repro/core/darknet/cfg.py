@@ -50,6 +50,18 @@ def _coerce(key: str, val: str):
         return val
 
 
+def conv_pad(options: dict[str, Any] | Section, size: int) -> int:
+    """Darknet conv/deconv padding rule, in one place.
+
+    ``pad=1`` means "same-ish": use size // 2 (even for size == 1, where
+    that is 0); otherwise an explicit ``padding=N`` wins, defaulting to 0.
+    """
+    get = options.get
+    if get("pad", 0):
+        return size // 2
+    return get("padding", 0)
+
+
 def parse_cfg(text: str) -> list[Section]:
     sections: list[Section] = []
     current: Section | None = None

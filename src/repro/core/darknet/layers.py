@@ -13,25 +13,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import ComputeEngine
+from repro.core import ComputeEngine
+from repro.kernels.common import apply_act, im2col  # noqa: F401  (re-export)
 
 _BN_EPS = 1e-5
-
-
-# ---------------------------------------------------------------- im2col ---
-
-def im2col(x, kh: int, kw: int, stride: int, pad: int):
-    """x: (B, H, W, C) -> patches (B, OH, OW, kh*kw*C)."""
-    patches = jax.lax.conv_general_dilated_patches(
-        x, (kh, kw), (stride, stride), [(pad, pad), (pad, pad)],
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    # conv_general_dilated_patches returns channel-major (C, kh, kw) feature
-    # order; normalize to (kh, kw, C) to match HWIO weight layout.
-    b, oh, ow, _ = patches.shape
-    c = x.shape[-1]
-    patches = patches.reshape(b, oh, ow, c, kh * kw)
-    patches = jnp.swapaxes(patches, -1, -2)  # (..., kh*kw, C)
-    return patches.reshape(b, oh, ow, kh * kw * c)
 
 
 def fold_batchnorm(gamma, beta, mean, var, bias=None):
@@ -47,20 +32,16 @@ def fold_batchnorm(gamma, beta, mean, var, bias=None):
 
 def conv2d(engine: ComputeEngine, params: dict, x, *, size: int, stride: int,
            pad: int, act: str, batch_normalize: bool):
-    """Darknet [convolutional]: im2col + ONE fused engine GEMM."""
+    """Darknet [convolutional]: ONE fused engine conv2d op (the registry
+    backend lowers it — im2col+GEMM on pallas/xla, or a direct kernel)."""
     w = params["w"]                       # (kh*kw*Cin, Cout)
     if batch_normalize:
         scale, shift = fold_batchnorm(params["gamma"], params["beta"],
                                       params["mean"], params["var"])
     else:
         scale, shift = None, params["b"]
-    b, h, wd, c = x.shape
-    cols = im2col(x, size, size, stride, pad)        # (B, OH, OW, khkwC)
-    oh, ow = cols.shape[1], cols.shape[2]
-    y = engine.matmul(cols.reshape(b * oh * ow, -1), w,
-                      scale=scale, shift=shift, act=act,
-                      out_dtype=x.dtype)
-    return y.reshape(b, oh, ow, -1)
+    return engine.conv2d(x, w, scale=scale, shift=shift, size=size,
+                         stride=stride, pad=pad, act=act, out_dtype=x.dtype)
 
 
 def deconv2d(engine: ComputeEngine, params: dict, x, *, size: int,
@@ -91,7 +72,6 @@ def deconv2d(engine: ComputeEngine, params: dict, x, *, size: int,
         out = out * scale + shift
     elif "b" in params:
         out = out + params["b"]
-    from repro.kernels.common import apply_act
     return apply_act(out, act).astype(x.dtype)
 
 
@@ -114,7 +94,6 @@ def upsample(x, *, stride: int):
 
 
 def shortcut(x, other, *, act: str = "linear"):
-    from repro.kernels.common import apply_act
     return apply_act(x + other, act)
 
 

@@ -1,21 +1,28 @@
-"""Darknet network builder: cfg sections -> params + jit-able forward.
+"""Darknet network builder: cfg sections -> params + compiled forward.
 
 Mirrors the paper's flow (Fig. 1): parse the Darknet description, map every
 conv/deconv/FC layer onto the compute engine, keep the rest as cheap
 elementwise/pooling glue.  Inference only (the paper's framework is an
 inference accelerator); weights come from init or a checkpoint.
+
+Deployment shape follows the toolflow pattern (fpgaConvNet, CNN2Gate):
+plan once at build, then `Network.compile(params, batch_size)` lowers the
+whole planned layer list into ONE compiled artifact (`CompiledNetwork`) —
+a single jit trace, engine op plan captured as static dispatch counts, and
+every subsequent call a straight executable invocation.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import ComputeEngine, backends
 from repro.core.darknet import cfg as cfg_mod
 from repro.core.darknet import layers as L
-from repro.core.engine import ComputeEngine
 
 
 @dataclasses.dataclass
@@ -46,14 +53,14 @@ class Network:
             t = s.type
             if t == "convolutional":
                 size, stride = s.get("size", 3), s.get("stride", 1)
-                pad = s.get("pad", 0) and size // 2 or s.get("padding", 0)
+                pad = cfg_mod.conv_pad(s, size)
                 f = s.get("filters", 1)
                 h = (h + 2 * pad - size) // stride + 1
                 w = (w + 2 * pad - size) // stride + 1
                 c = f
             elif t == "deconvolutional":
                 size, stride = s.get("size", 3), s.get("stride", 1)
-                pad = s.get("pad", 0) and size // 2 or s.get("padding", 0)
+                pad = cfg_mod.conv_pad(s, size)
                 f = s.get("filters", 1)
                 h = (h - 1) * stride + size - 2 * pad
                 w = (w - 1) * stride + size - 2 * pad
@@ -123,14 +130,14 @@ class Network:
             t, o = p.type, p.options
             if t == "convolutional":
                 size = o.get("size", 3)
-                pad = o.get("pad", 0) and size // 2 or o.get("padding", 0)
+                pad = cfg_mod.conv_pad(o, size)
                 x = L.conv2d(eng, params[f"l{p.index}"], x, size=size,
                              stride=o.get("stride", 1), pad=pad,
                              act=o.get("activation", "leaky"),
                              batch_normalize=bool(o.get("batch_normalize", 0)))
             elif t == "deconvolutional":
                 size = o.get("size", 3)
-                pad = o.get("pad", 0) and size // 2 or o.get("padding", 0)
+                pad = cfg_mod.conv_pad(o, size)
                 x = L.deconv2d(eng, params[f"l{p.index}"], x, size=size,
                                stride=o.get("stride", 1), pad=pad,
                                act=o.get("activation", "leaky"),
@@ -162,3 +169,86 @@ class Network:
 
     def num_params(self, params) -> int:
         return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
+
+    # -------------------------------------------------------------- compile
+    def compile(self, params: dict, batch_size: int = 1, *,
+                dtype=jnp.float32,
+                donate_params: bool = False) -> "CompiledNetwork":
+        """Lower the planned layer list into a single compiled artifact.
+
+        One jit trace happens here (AOT lower + compile); every
+        `CompiledNetwork.__call__` afterwards is a straight executable
+        invocation — no retracing, no per-layer Python dispatch.
+        """
+        return CompiledNetwork(self, params, batch_size, dtype=dtype,
+                               donate_params=donate_params)
+
+
+class CompiledNetwork:
+    """Compile-once inference artifact for a planned Darknet `Network`.
+
+    Holds the AOT-compiled executable for a fixed (batch_size, H, W, C)
+    input, the bound params, and the engine's static op-dispatch plan
+    (captured from the registry's trace-time counters during the single
+    lowering).  Exposes `__call__`, `warmup()` and `profile()`.
+
+    With ``donate_params=True`` the param buffers are donated to each call
+    (the executable may alias them); the caller must then re-supply fresh
+    params per call — use the default for a resident serving artifact.
+    """
+
+    def __init__(self, net: Network, params: dict, batch_size: int, *,
+                 dtype=jnp.float32, donate_params: bool = False):
+        self.net = net
+        self.params = params
+        self.batch_size = batch_size
+        self.donate_params = donate_params
+        h, w, c = net.in_shape
+        self.in_spec = jax.ShapeDtypeStruct((batch_size, h, w, c), dtype)
+        self._trace_count = 0
+
+        def fwd(p, x):
+            self._trace_count += 1  # python side-effect: counts traces only
+            return net.apply(p, x)
+
+        donate = (0,) if donate_params else ()
+        before = backends.dispatch_counts()
+        self._compiled = (jax.jit(fwd, donate_argnums=donate)
+                          .lower(params, self.in_spec).compile())
+        # The single trace just happened; the counter diff IS the network's
+        # static engine-op plan (e.g. {('xla','conv2d'): n_conv_layers}).
+        self.op_counts = backends.counts_since(before)
+
+    @property
+    def trace_count(self) -> int:
+        return self._trace_count
+
+    def __call__(self, x, params: dict | None = None):
+        if x.shape != self.in_spec.shape:
+            raise ValueError(f"compiled for input {self.in_spec.shape}, "
+                             f"got {x.shape}")
+        p = self.params if params is None else params
+        return self._compiled(p, x)
+
+    def warmup(self) -> "CompiledNetwork":
+        """Run one call on zeros (device warm-up; compilation already done
+        at construction).  Returns self for chaining."""
+        jax.block_until_ready(
+            self(jnp.zeros(self.in_spec.shape, self.in_spec.dtype)))
+        return self
+
+    def profile(self, x=None, reps: int = 3) -> dict:
+        """Timed execution: per-call wall time plus the static engine
+        op-dispatch counts captured at compile."""
+        if x is None:
+            x = jnp.zeros(self.in_spec.shape, self.in_spec.dtype)
+        jax.block_until_ready(self(x))
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = jax.block_until_ready(self(x))
+        dt = (time.perf_counter() - t0) / reps
+        del out
+        return {"per_call_s": dt, "reps": reps,
+                "batch_size": self.batch_size,
+                "trace_count": self._trace_count,
+                "op_counts": dict(self.op_counts)}

@@ -2,14 +2,19 @@
 
 Every dense computation in this framework (CNN conv layers via im2col, LM
 QKV/O/MLP/MoE projections, SSD intra-chunk matmuls, LM head) routes through
-this engine.  Two backends share identical semantics:
+this engine.  The engine itself is a thin dispatcher: each op resolves
+through the backend/op registry (core/backends.py), so adding an execution
+target is `register_backend(...)` — no engine changes.  Built-in backends:
 
-  pallas : the TPU-target kernel (kernels/gemm.py) with explicit VMEM
-           BlockSpec tiling — interpret=True executes it on CPU for tests.
-  xla    : jax.lax.dot_general with the same precision policy and the same
-           fused epilogue, expressed so XLA fuses it into the matmul.  Used
-           where Pallas cannot lower (the 512-host-device dry-run on the CPU
-           backend) and as the A/B reference for §Perf.
+  pallas : the TPU-target kernels with explicit VMEM BlockSpec tiling —
+           interpret=True executes them on CPU for tests.
+  xla    : jax.lax formulations with the same precision policy and the same
+           fused epilogue, expressed so XLA fuses them.  Used where Pallas
+           cannot lower (the 512-host-device dry-run on the CPU backend) and
+           as the A/B reference for §Perf.
+
+Block shapes come from the per-process autotune cache (keyed on
+(op, shapes, dtype, backend)) unless pinned via bm/bk/bn.
 
 The engine is a frozen dataclass → hashable → usable as a static jit arg and
 inside jit'd model code.
@@ -18,26 +23,39 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 
+from repro.core import backends
 from repro.core.precision import Precision
-from repro.kernels import ops as kernel_ops
-from repro.kernels.common import apply_act
-
-BACKENDS = ("pallas", "xla")
 
 
 @dataclasses.dataclass(frozen=True)
 class ComputeEngine:
     backend: str = "xla"
     precision: Precision = Precision("fp32_strict")
-    # 0 = auto-pick via kernels.ops.pick_blocks (VMEM-budget heuristic).
+    # 0 = auto-pick via the registry's autotune cache (VMEM-budget heuristic).
     bm: int = 0
     bk: int = 0
     bn: int = 0
     interpret: bool = True  # CPU container; False on real TPU
 
+    # ---------------------------------------------------------- dispatch ---
+    def _resolve(self, op: str, shapes: tuple, dtype) -> backends.OpContext:
+        """Look up the backend, consult the autotune cache, count the
+        dispatch (trace-time: compiled programs pay this once)."""
+        be = backends.get_backend(self.backend)
+        if self.bm and self.bk and self.bn:
+            tiles = (self.bm, self.bk, self.bn)
+        else:
+            tiles = be.tiles(op, shapes, dtype)
+        backends.record_dispatch(self.backend, op)
+        return backends.OpContext(precision=self.precision,
+                                  interpret=self.interpret, tiles=tiles)
+
+    def _op(self, op: str):
+        return backends.get_backend(self.backend).op(op)
+
+    # --------------------------------------------------------------- ops ---
     def matmul(self, x, w, *, scale=None, shift=None, act: str = "linear",
                out_dtype=None):
         """act((x @ w) * scale + shift) over the last dim of x.
@@ -47,37 +65,70 @@ class ComputeEngine:
         *lead, k = x.shape
         n = w.shape[-1]
         out_dtype = out_dtype or self.precision.compute_dtype
+        xc = x.astype(self.precision.compute_dtype).reshape(-1, k)
+        wc = w.astype(self.precision.compute_dtype)
+        ctx = self._resolve("matmul", (xc.shape[0], k, n), xc.dtype)
+        y = self._op("matmul")(xc, wc, scale, shift, act=act,
+                               out_dtype=out_dtype, ctx=ctx)
+        return y.reshape(*lead, n)
+
+    def bmm(self, x, w, *, out_dtype=None):
+        """Batched GEMM (B, M, K) @ (B, K, N), fp32 accumulate."""
+        b, m, k = x.shape
+        n = w.shape[-1]
+        out_dtype = out_dtype or x.dtype
         xc = x.astype(self.precision.compute_dtype)
         wc = w.astype(self.precision.compute_dtype)
-        if self.backend == "pallas":
-            x2 = xc.reshape(-1, k)
-            y = kernel_ops.matmul(x2, wc, scale, shift, act=act,
-                                  out_dtype=out_dtype, bm=self.bm,
-                                  bk=self.bk, bn=self.bn,
-                                  interpret=self.interpret)
-            return y.reshape(*lead, n)
-        # xla backend: same math, fused by XLA.  Emission dtype =
-        # precision.reduce_dtype (see core/precision.py): f32 under
-        # fp32_strict; bf16 under mixed so row-parallel partial-sum
-        # all-reduces ride the wire at half width.
-        rdt = self.precision.reduce_dtype
-        acc = jax.lax.dot_general(
-            xc, wc, (((xc.ndim - 1,), (0,)), ((), ())),
-            preferred_element_type=rdt,
-            precision=self.precision.lax_precision)
-        if scale is not None:
-            acc = acc * scale.astype(rdt)
-        if shift is not None:
-            acc = acc + shift.astype(rdt)
-        return apply_act(acc, act).astype(out_dtype)
+        ctx = self._resolve("bmm", (m, k, n), xc.dtype)
+        return self._op("bmm")(xc, wc, out_dtype=out_dtype, ctx=ctx)
 
-    def einsum(self, spec: str, x, y, *, out_dtype=None):
+    def conv2d(self, x, w, *, scale=None, shift=None, size: int,
+               stride: int = 1, pad: int = 0, act: str = "linear",
+               out_dtype=None):
+        """Fused conv+BN+activation as ONE engine invocation.
+
+        x: (B, H, W, Cin) NHWC; w: (kh*kw*Cin, Cout) flattened HWIO;
+        scale/shift: (Cout,) or None (folded batch-norm / bias epilogue).
+        """
+        out_dtype = out_dtype or self.precision.compute_dtype
+        xc = x.astype(self.precision.compute_dtype)
+        wc = w.astype(self.precision.compute_dtype)
+        ctx = self._resolve(
+            "conv2d", (xc.shape, wc.shape[-1], size, stride, pad), xc.dtype)
+        return self._op("conv2d")(xc, wc, scale, shift, size=size,
+                                  stride=stride, pad=pad, act=act,
+                                  out_dtype=out_dtype, ctx=ctx)
+
+    def attention(self, q, k, v, *, causal: bool = True, sm_scale=None):
+        """softmax(q k^T / sqrt(D)) v, fp32 softmax statistics.
+
+        q: (B, Sq, H, D); k, v: (B, Skv, H, D) (kv heads already broadcast).
+        When causal, queries are right-aligned against keys, so Sq <= Skv
+        is required (Sq > Skv would leave early query rows fully masked).
+        This is the single-device kernel-backed op; the distribution-aware
+        blockwise formulation GSPMD shards lives in models/attention.py.
+        """
+        if causal and q.shape[1] > k.shape[1]:
+            raise ValueError(
+                f"causal attention requires Sq <= Skv (right-aligned "
+                f"queries); got Sq={q.shape[1]}, Skv={k.shape[1]}")
+        qc = q.astype(self.precision.compute_dtype)
+        kc = k.astype(self.precision.compute_dtype)
+        vc = v.astype(self.precision.compute_dtype)
+        ctx = self._resolve("attention", (qc.shape, kc.shape), qc.dtype)
+        return self._op("attention")(qc, kc, vc, causal=causal,
+                                     sm_scale=sm_scale, ctx=ctx)
+
+    def einsum(self, spec: str, x, y, *, out_dtype=None,
+               acc_dtype=jnp.float32):
         """Precision-policy einsum for the non-GEMM-shaped contractions
-        (attention scores, SSD chunk terms).  fp32 accumulate always."""
+        (attention scores, SSD chunk terms).  fp32 accumulate by default;
+        acc_dtype=precision.reduce_dtype lets collectives ride bf16 under
+        the mixed policy (MoE expert GEMMs)."""
         out_dtype = out_dtype or self.precision.compute_dtype
         acc = jnp.einsum(spec, x.astype(self.precision.compute_dtype),
                          y.astype(self.precision.compute_dtype),
-                         preferred_element_type=jnp.float32,
+                         preferred_element_type=acc_dtype,
                          precision=self.precision.lax_precision)
         return acc.astype(out_dtype)
 
@@ -86,5 +137,6 @@ class ComputeEngine:
 # lower on the CPU backend); kernel tests and the TPU target use pallas.
 def make_engine(backend: str = "xla", policy: str = "fp32_strict",
                 interpret: bool = True, **tiles) -> ComputeEngine:
+    backends.get_backend(backend)  # fail fast on unknown backends
     return ComputeEngine(backend=backend, precision=Precision(policy),
                          interpret=interpret, **tiles)

@@ -13,6 +13,7 @@ Darknet layer needs: plain bias (scale=1, shift=bias), folded batch-norm
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 # Activations supported by the fused epilogue.  Darknet's default conv
@@ -47,3 +48,21 @@ def epilogue(acc, scale, shift, act: str):
     if shift is not None:
         y = y + shift
     return apply_act(y, act)
+
+
+def im2col(x, kh: int, kw: int, stride: int, pad: int):
+    """x: (B, H, W, C) -> patches (B, OH, OW, kh*kw*C).
+
+    The canonical Darknet conv lowering: materialize patches, GEMM on the
+    engine.  Shared by every backend's im2col-based conv2d op.
+    """
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride), [(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    # conv_general_dilated_patches returns channel-major (C, kh, kw) feature
+    # order; normalize to (kh, kw, C) to match HWIO weight layout.
+    b, oh, ow, _ = patches.shape
+    c = x.shape[-1]
+    patches = patches.reshape(b, oh, ow, c, kh * kw)
+    patches = jnp.swapaxes(patches, -1, -2)  # (..., kh*kw, C)
+    return patches.reshape(b, oh, ow, kh * kw * c)

@@ -22,11 +22,15 @@ def _round_up(x: int, m: int) -> int:
 
 
 def pick_blocks(m: int, k: int, n: int, dtype) -> tuple[int, int, int]:
-    """Block-shape heuristic for the VMEM working set.
+    """Block-shape heuristic for the VMEM working set (pure function).
 
     Targets: MXU alignment (multiples of (8,128) lanes — we use 128 where the
     dim allows), and a double-buffered working set
     2*(bm*bk + bk*bn) + 2*bm*bn floats comfortably under ~8 MiB of VMEM.
+
+    Callers go through the process-wide autotune cache in core/backends.py
+    (keyed on (op, shapes, dtype, backend)) rather than invoking this
+    per call; `_cached_blocks` below routes the default path there too.
     """
     itemsize = jnp.dtype(dtype).itemsize
     bm = min(_round_up(m, 8), 256)
@@ -43,6 +47,19 @@ def pick_blocks(m: int, k: int, n: int, dtype) -> tuple[int, int, int]:
     return bm, bk, bn
 
 
+def _cached_blocks(op: str, m: int, k: int, n: int, dtype
+                   ) -> tuple[int, int, int]:
+    """Default block pick, memoized in the registry's autotune cache (same
+    picker and cache key as engine dispatch, so both paths agree).
+
+    Imported lazily: core/backends.py imports this module at load time, and
+    by the time a kernel wrapper actually executes the registry is loaded.
+    """
+    from repro.core import backends
+    return backends.tile_plan(op, (m, k, n), dtype, "pallas",
+                              backends._pallas_tile_picker)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("act", "out_dtype", "bm", "bk", "bn", "interpret"))
@@ -54,7 +71,7 @@ def matmul(x, w, scale=None, shift=None, *, act: str = "linear",
     _, n = w.shape
     out_dtype = out_dtype or x.dtype
     if not (bm and bk and bn):
-        bm, bk, bn = pick_blocks(m, k, n, x.dtype)
+        bm, bk, bn = _cached_blocks("matmul", m, k, n, x.dtype)
     mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
     xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
     wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
@@ -75,8 +92,7 @@ def bmm(x, w, *, out_dtype=None, bm: int = 0, bk: int = 0, bn: int = 0,
     _, _, n = w.shape
     out_dtype = out_dtype or x.dtype
     if not (bm and bk and bn):
-        bm, bk, bn = pick_blocks(m, k, n, x.dtype)
-        bm, bk, bn = min(bm, 128), min(bk, 256), min(bn, 128)
+        bm, bk, bn = _cached_blocks("bmm", m, k, n, x.dtype)
     mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
     xp = jnp.pad(x, ((0, 0), (0, mp - m), (0, kp - k)))
     wp = jnp.pad(w, ((0, 0), (0, kp - k), (0, np_ - n)))

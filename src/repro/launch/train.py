@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.checkpoint import manager as ckpt
 from repro.configs.base import SHAPES, ShapeConfig, get_arch, reduced
-from repro.core.engine import make_engine
+from repro.core import make_engine
 from repro.data.pipeline import SyntheticLM
 from repro.launch.fault import FailureInjector, StepWatchdog
 from repro.models import transformer as tfm

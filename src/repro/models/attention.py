@@ -21,7 +21,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import ComputeEngine
+from repro.core import ComputeEngine
 from repro.models.common import norm_init, rope_apply
 from repro.sharding import hints
 
@@ -48,7 +48,6 @@ def blockwise_attention(engine: ComputeEngine, q, k, v, *, causal: bool,
     n_q = Sq // qc
     assert n_q * qc == Sq, (Sq, qc)
     sm = 1.0 / (Dh ** 0.5)
-    prec = engine.precision
 
     def q_shard(x):
         if shard_mode == "heads":
@@ -75,11 +74,8 @@ def blockwise_attention(engine: ComputeEngine, q, k, v, *, causal: bool,
             m, l, acc = carry
             kj = jax.lax.dynamic_slice_in_dim(k, j * kvc, kvc, axis=1)
             vj = jax.lax.dynamic_slice_in_dim(v, j * kvc, kvc, axis=1)
-            s = jnp.einsum("bqhgd,bkhd->bhgqk",
-                           qi.astype(prec.compute_dtype),
-                           kj.astype(prec.compute_dtype),
-                           preferred_element_type=jnp.float32,
-                           precision=prec.lax_precision) * sm
+            s = engine.einsum("bqhgd,bkhd->bhgqk", qi, kj,
+                              out_dtype=jnp.float32) * sm
             q_idx = (q_offset + i * qc
                      + jax.lax.broadcasted_iota(jnp.int32, s.shape, 3))
             k_idx = j * kvc + jax.lax.broadcasted_iota(jnp.int32, s.shape, 4)
@@ -91,11 +87,8 @@ def blockwise_attention(engine: ComputeEngine, q, k, v, *, causal: bool,
             p = jnp.exp(s - m_new[..., None])
             alpha = jnp.exp(m - m_new)
             l_new = l * alpha + jnp.sum(p, axis=-1)
-            acc_new = acc * alpha[..., None] + jnp.einsum(
-                "bhgqk,bkhd->bhgqd", p.astype(prec.compute_dtype),
-                vj.astype(prec.compute_dtype),
-                preferred_element_type=jnp.float32,
-                precision=prec.lax_precision)
+            acc_new = acc * alpha[..., None] + engine.einsum(
+                "bhgqk,bkhd->bhgqd", p, vj, out_dtype=jnp.float32)
             return (m_new, l_new, acc_new), None
 
         init = (jnp.full((B, KV, G, qc), _NEG, jnp.float32),
@@ -200,17 +193,11 @@ def gqa_decode(engine: ComputeEngine, p, x, cache, pos, cos, sin, cfg):
     qg = q.reshape(B, 1, KV, H // KV, hd)
     # Flash-decoding under GSPMD: S_max is sharded; max/sum lower to partial
     # reductions + all-reduce, the weighted sum to partial matmul+all-reduce.
-    prec = engine.precision
-    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(prec.compute_dtype),
-                   ck.astype(prec.compute_dtype),
-                   preferred_element_type=jnp.float32,
-                   precision=prec.lax_precision) / (hd ** 0.5)
+    s = engine.einsum("bqhgd,bkhd->bhgqk", qg, ck,
+                      out_dtype=jnp.float32) / (hd ** 0.5)
     s = _pos_mask(s, pos, 4)
     w = jax.nn.softmax(s, axis=-1)
-    y = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(prec.compute_dtype),
-                   cv.astype(prec.compute_dtype),
-                   preferred_element_type=jnp.float32,
-                   precision=prec.lax_precision)
+    y = engine.einsum("bhgqk,bkhd->bqhgd", w, cv, out_dtype=jnp.float32)
     y = y.reshape(B, 1, H * hd).astype(x.dtype)
     return engine.matmul(y, p["wo"]), {"k": ck, "v": cv}
 
@@ -286,7 +273,6 @@ def mla_decode(engine: ComputeEngine, p, x, cache, pos, cos, sin, cfg):
     from repro.models.common import rmsnorm
     B, _, D = x.shape
     nope, rope_d, lora, vd, H = _mla_split(cfg)
-    prec = engine.precision
     q = engine.matmul(x, p["wq"]).reshape(B, 1, H, nope + rope_d)
     q_nope, q_rope = q[..., :nope], q[..., nope:]
     q_rope = rope_apply(q_rope, cos, sin)
@@ -299,29 +285,17 @@ def mla_decode(engine: ComputeEngine, p, x, cache, pos, cos, sin, cfg):
     cr = hints.shard(cr, "dp", "model", None)
     # absorb: q_abs[b,h,r] = sum_n q_nope[b,h,n] * W_uk[r, h, n]
     w_uk = p["w_uk"].reshape(lora, H, nope)
-    q_abs = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(prec.compute_dtype),
-                       w_uk.astype(prec.compute_dtype),
-                       preferred_element_type=jnp.float32,
-                       precision=prec.lax_precision)
-    s = (jnp.einsum("bqhr,bsr->bhqs", q_abs.astype(prec.compute_dtype),
-                    cc.astype(prec.compute_dtype),
-                    preferred_element_type=jnp.float32,
-                    precision=prec.lax_precision)
-         + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(prec.compute_dtype),
-                      cr.astype(prec.compute_dtype),
-                      preferred_element_type=jnp.float32,
-                      precision=prec.lax_precision))
+    q_abs = engine.einsum("bqhn,rhn->bqhr", q_nope, w_uk,
+                          out_dtype=jnp.float32)
+    s = (engine.einsum("bqhr,bsr->bhqs", q_abs, cc, out_dtype=jnp.float32)
+         + engine.einsum("bqhr,bsr->bhqs", q_rope, cr,
+                         out_dtype=jnp.float32))
     s = s / ((nope + rope_d) ** 0.5)
     s = _pos_mask(s, pos, 3)
     w = jax.nn.softmax(s, axis=-1)
-    ctx = jnp.einsum("bhqs,bsr->bqhr", w.astype(prec.compute_dtype),
-                     cc.astype(prec.compute_dtype),
-                     preferred_element_type=jnp.float32,
-                     precision=prec.lax_precision)     # (B, 1, H, lora)
+    ctx = engine.einsum("bhqs,bsr->bqhr", w, cc,
+                        out_dtype=jnp.float32)         # (B, 1, H, lora)
     w_uv = p["w_uv"].reshape(lora, H, vd)
-    y = jnp.einsum("bqhr,rhv->bqhv", ctx.astype(prec.compute_dtype),
-                   w_uv.astype(prec.compute_dtype),
-                   preferred_element_type=jnp.float32,
-                   precision=prec.lax_precision)
+    y = engine.einsum("bqhr,rhv->bqhv", ctx, w_uv, out_dtype=jnp.float32)
     y = y.reshape(B, 1, H * vd).astype(x.dtype)
     return engine.matmul(y, p["wo"]), {"c_kv": cc, "k_rope": cr}

@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import ComputeEngine
+from repro.core import ComputeEngine
 from repro.sharding import hints
 
 

@@ -16,7 +16,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import ComputeEngine
+from repro.core import ComputeEngine
 from repro.models.mlp import mlp_forward, mlp_init
 from repro.sharding import hints
 
@@ -100,19 +100,18 @@ def moe_forward(engine: ComputeEngine, p, x, cfg):
         disp = hints.shard(disp, "dp", "model", None, None)
 
     # ---- expert compute: batched gated MLP, expert dim sharded (EP) ----
+    # acc_dtype = reduce_dtype so the cross-chip partial sums GSPMD places
+    # after these contractions ride bf16 under the mixed policy.
     rdt = prec.reduce_dtype
-    g = jnp.einsum("becd,edf->becf", disp, p["wg"].astype(prec.compute_dtype),
-                   preferred_element_type=rdt,
-                   precision=prec.lax_precision)
-    u = jnp.einsum("becd,edf->becf", disp, p["wu"].astype(prec.compute_dtype),
-                   preferred_element_type=rdt,
-                   precision=prec.lax_precision)
+    g = engine.einsum("becd,edf->becf", disp, p["wg"], acc_dtype=rdt,
+                      out_dtype=rdt)
+    u = engine.einsum("becd,edf->becf", disp, p["wu"], acc_dtype=rdt,
+                      out_dtype=rdt)
     h = (g * jax.nn.sigmoid(g.astype(f32)).astype(rdt) * u).astype(
         prec.compute_dtype)
     h = hints.shard(h, "dp", "model", None, None)
-    eo = jnp.einsum("becf,efd->becd", h, p["wd"].astype(prec.compute_dtype),
-                    preferred_element_type=rdt,
-                    precision=prec.lax_precision)               # (B, E, C, D)
+    eo = engine.einsum("becf,efd->becd", h, p["wd"], acc_dtype=rdt,
+                       out_dtype=rdt)                           # (B, E, C, D)
     if local:
         # all-gather expert outputs over the model axis (the ONLY MoE
         # collective in this variant), then combine locally.

@@ -19,7 +19,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import ComputeEngine
+from repro.core import ComputeEngine
 from repro.models import attention as attn
 from repro.models import frontend as fe
 from repro.models import moe as moe_mod

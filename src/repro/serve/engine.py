@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import ComputeEngine
+from repro.core import ComputeEngine, backends
 from repro.serve import kvcache
 from repro.serve.serve_step import make_decode_step
 
@@ -43,6 +43,9 @@ class ServingEngine:
         self.pending: deque[Request] = deque()
         self._replay: list[deque] = [deque() for _ in range(slots)]
         self._last: np.ndarray = np.zeros(slots, np.int32)
+        # Static engine-op plan of one decode step, captured from the
+        # registry's trace-time counters on the first (tracing) call.
+        self.op_counts: dict | None = None
 
     def submit(self, req: Request):
         self.pending.append(req)
@@ -67,9 +70,12 @@ class ServingEngine:
                 continue
             toks[s, 0] = (self._replay[s].popleft() if self._replay[s]
                           else self._last[s])
+        snap = backends.dispatch_counts() if self.op_counts is None else None
         logits, self.caches = self._decode(
             self.params, self.caches, jnp.asarray(toks),
             jnp.asarray(self.pos))
+        if snap is not None:
+            self.op_counts = backends.counts_since(snap)
         nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1), np.int32)
         for s, req in enumerate(self.active):
             if req is None:

@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import ComputeEngine
+from repro.core import ComputeEngine
 from repro.models import transformer as tfm
 from repro.models.common import lm_head_logits
 

@@ -49,11 +49,17 @@ def batch_axes() -> tuple:
 def _current_axis_names():
     try:
         mesh = jax.sharding.get_abstract_mesh()
+    except Exception:  # older jax: fall back to the physical mesh context
+        mesh = None
+    if mesh is not None and not getattr(mesh, "empty", False):
+        return tuple(mesh.axis_names)
+    try:
+        phys = jax.interpreters.pxla.thread_resources.env.physical_mesh
     except Exception:  # pragma: no cover
         return ()
-    if mesh is None or getattr(mesh, "empty", False):
+    if phys is None or getattr(phys, "empty", True):
         return ()
-    return tuple(mesh.axis_names)
+    return tuple(phys.axis_names)
 
 
 def resolve(tag):

@@ -14,7 +14,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import ComputeEngine
+from repro.core import ComputeEngine
 from repro.models import transformer as tfm
 from repro.train import optimizer as opt
 from repro.train.compression import ef_compress_tree

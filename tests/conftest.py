@@ -1,0 +1,33 @@
+"""Shared test fixtures.
+
+Registers a third `ref` backend — the pure-jnp oracles from
+kernels/ref.py — through the PUBLIC registry API.  This is deliberately
+done here and not in library code: it exercises exactly the path a
+downstream backend author uses (see docs/engine_api.md), and it keeps the
+shipped registry to the two real execution targets.
+"""
+from repro.core import backends, register_backend
+from repro.kernels import ref
+
+
+def _ref_matmul(x, w, scale, shift, *, act, out_dtype, ctx):
+    return ref.matmul_ref(x, w, scale=scale, shift=shift, act=act,
+                          out_dtype=out_dtype)
+
+
+def _ref_bmm(x, w, *, out_dtype, ctx):
+    return ref.bmm_ref(x, w, out_dtype=out_dtype)
+
+
+def _ref_attention(q, k, v, *, causal, sm_scale, ctx):
+    return ref.flash_attention_ref(q, k, v, causal=causal,
+                                   sm_scale=sm_scale)
+
+
+if "ref" not in backends.list_backends():
+    register_backend("ref", {
+        "matmul": _ref_matmul,
+        "bmm": _ref_bmm,
+        "conv2d": backends.im2col_conv2d(_ref_matmul),
+        "attention": _ref_attention,
+    })

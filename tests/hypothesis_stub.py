@@ -1,0 +1,49 @@
+"""Fallback decorators so property-based tests collect (and cleanly skip)
+when `hypothesis` is not installed.
+
+Usage in a test module:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:  # optional dev dep (requirements-dev.txt)
+        from hypothesis_stub import given, settings, st
+
+With the real package absent, `@given(...)`-decorated tests call
+``pytest.importorskip("hypothesis")`` at run time and report as skipped,
+while every non-property test in the module still collects and runs —
+the whole suite no longer aborts at collection.
+"""
+from __future__ import annotations
+
+import pytest
+
+
+def given(*_args, **_kwargs):
+    def deco(fn):
+        def skipper():
+            pytest.importorskip("hypothesis")
+
+        # Keep the test's identity, but a bare () signature so pytest does
+        # not mistake the property arguments for fixtures (hypothesis
+        # normally injects them).
+        skipper.__name__ = fn.__name__
+        skipper.__doc__ = fn.__doc__
+        skipper.__module__ = fn.__module__
+        return skipper
+
+    return deco
+
+
+def settings(*_args, **_kwargs):
+    return lambda fn: fn
+
+
+class _Strategies:
+    """Attribute sink: st.integers(...), st.sampled_from(...), etc."""
+
+    def __getattr__(self, name):
+        return lambda *a, **k: None
+
+
+st = _Strategies()
+strategies = st

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import ARCH_IDS, get_arch, reduced, input_specs
-from repro.core.engine import make_engine
+from repro.core import make_engine
 from repro.models import transformer as tfm
 from repro.models.common import lm_head_logits
 

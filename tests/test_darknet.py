@@ -4,13 +4,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep — property tests skip without it
+    from hypothesis_stub import given, settings, st
 
 from repro.configs.darknet_ref import (DARKNET_SMALL_CFG, SEGNET_SMALL_CFG)
 from repro.core.darknet import cfg as cfg_mod
 from repro.core.darknet import layers as L
 from repro.core.darknet.network import Network
-from repro.core.engine import make_engine
+from repro.core import make_engine
 
 
 # ------------------------------------------------------------------ parser
@@ -35,6 +39,20 @@ def test_parse_roundtrip():
 def test_parse_rejects_unknown_section():
     with pytest.raises(ValueError):
         cfg_mod.parse_cfg("[net]\nheight=8\nwidth=8\nchannels=1\n[yolo]\n")
+
+
+def test_conv_pad_rule():
+    """Single source of truth for darknet's pad/padding rule."""
+    assert cfg_mod.conv_pad({"pad": 1}, 3) == 1          # same-ish conv
+    assert cfg_mod.conv_pad({"pad": 1}, 5) == 2
+    assert cfg_mod.conv_pad({"pad": 1, "padding": 7}, 3) == 1  # pad wins
+    assert cfg_mod.conv_pad({"pad": 0, "padding": 2}, 3) == 2  # explicit
+    assert cfg_mod.conv_pad({"padding": 2}, 3) == 2
+    assert cfg_mod.conv_pad({}, 3) == 0                  # default
+    assert cfg_mod.conv_pad({"pad": 1}, 1) == 0          # 1x1: size//2 == 0
+    # Section objects work too (plan path uses them)
+    sec = cfg_mod.Section("convolutional", {"pad": 1, "size": 3})
+    assert cfg_mod.conv_pad(sec, 3) == 1
 
 
 # ------------------------------------------------------- conv/deconv oracle

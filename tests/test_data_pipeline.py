@@ -1,6 +1,10 @@
 """Data pipeline: determinism, shape correctness, prefetcher ordering."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep — property tests skip without it
+    from hypothesis_stub import given, settings, st
 
 from repro.configs.base import ShapeConfig, get_arch, reduced
 from repro.data.pipeline import Prefetcher, SyntheticLM

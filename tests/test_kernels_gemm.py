@@ -7,7 +7,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep — property tests skip without it
+    from hypothesis_stub import given, settings, st
 
 from repro.kernels import ops, ref
 from repro.kernels.common import ACTIVATIONS

@@ -57,7 +57,7 @@ def test_ssd_kernel_chunk_invariance():
 
 def test_ssd_kernel_matches_jnp_chunked():
     """Kernel vs the production jnp path (models/ssm.ssd_chunked)."""
-    from repro.core.engine import make_engine
+    from repro.core import make_engine
     from repro.models.ssm import ssd_chunked
     eng = make_engine("xla", "fp32_strict")
     b, s, h, p, n = 2, 96, 4, 16, 8

@@ -3,9 +3,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core.engine import make_engine
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep — property tests skip without it
+    from hypothesis_stub import given, settings, st
+
+from repro.core import make_engine
 from repro.kernels import ref as kref
 from repro.models import ssm as ssm_mod
 from repro.models.attention import blockwise_attention

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_arch, reduced
-from repro.core.engine import make_engine
+from repro.core import make_engine
 from repro.models import transformer as tfm
 from repro.serve import kvcache
 from repro.serve.engine import Request, ServingEngine

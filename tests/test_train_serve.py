@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import get_arch, reduced
-from repro.core.engine import make_engine
+from repro.core import make_engine
 from repro.models import transformer as tfm
 from repro.serve import kvcache
 from repro.serve.serve_step import make_decode_step, make_prefill_step
