@@ -3,7 +3,8 @@
 Measures: (a) darknet-19-style classifier and (b) the deconv encoder-decoder,
 with the engine's fused conv+BN+activation path vs an unfused reference
 (separate conv, BN, activation) — the paper's stream-fusion claim at network
-scale.
+scale; plus (c) the serving path: a ragged request stream through the
+bucketed `CNNServingEngine` vs naive per-request-shape compilation.
 """
 from __future__ import annotations
 
@@ -13,9 +14,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.darknet_ref import DARKNET19_CFG, SEGNET_SMALL_CFG
+from repro.configs.darknet_ref import (DARKNET19_CFG, DARKNET_SMALL_CFG,
+                                       SEGNET_SMALL_CFG)
 from repro.core.darknet.network import Network
 from repro.core import make_engine
+from repro.serve.frontend import CNNServingEngine, ImageRequest
 
 
 def _time(fn, reps=3):
@@ -113,4 +116,54 @@ def run() -> list[tuple[str, float, str]]:
                  f"fused_speedup={tu / tf:.2f}x"))
     rows.append(("cnn/conv_bn_act_xla_native_ref", tn * 1e6,
                  "backend reference (TPU target uses conv_direct kernel)"))
+    rows.extend(_serving_sweep())
+    return rows
+
+
+def _serving_sweep() -> list[tuple[str, float, str]]:
+    """Ragged request stream: bucketed CompileCache serving vs compiling a
+    fresh executable for every request batch shape (the naive deployment)."""
+    ragged = [1, 3, 8, 2, 9, 4, 1, 5]                # arrival burst sizes
+    rng = np.random.default_rng(0)
+    bursts = [rng.standard_normal((b, 28, 28, 3)).astype(np.float32)
+              for b in ragged]
+    n_images = sum(ragged)
+
+    def fresh_net():
+        net = Network(DARKNET_SMALL_CFG, make_engine("xla", "fp32_strict"))
+        return net, net.init(jax.random.PRNGKey(0))
+
+    # bucketed serving frontend (compile cache pre-warmed: steady state)
+    net, params = fresh_net()
+    eng = CNNServingEngine(net.compile_cache(params,
+                                             buckets=(1, 2, 4, 8)).warmup())
+    t0 = time.perf_counter()
+    rid = 0
+    for xs in bursts:
+        reqs = []
+        for im in xs:
+            reqs.append(ImageRequest(rid=rid, image=np.asarray(im)))
+            rid += 1
+        eng.run(reqs)
+    t_served = time.perf_counter() - t0
+    st = eng.stats()
+    rows = [("cnn/serve_bucketed_stream", t_served / n_images * 1e6,
+             f"img/s={n_images / t_served:.1f} "
+             f"traces={st['cache']['traces']} "
+             f"pad_waste={st['cache']['pad_waste'] * 100:.0f}% "
+             f"lat_avg_ms={st['latency_s']['avg'] * 1e3:.1f}")]
+
+    # naive baseline: every request batch compiles its own executable
+    net, params = fresh_net()
+    t0 = time.perf_counter()
+    traces = 0
+    for xs in bursts:
+        cn = net.compile(params, batch_size=xs.shape[0])
+        traces += cn.trace_count
+        jax.block_until_ready(cn(jnp.asarray(xs)))
+    t_naive = time.perf_counter() - t0
+    rows.append(("cnn/serve_naive_per_request_compile",
+                 t_naive / n_images * 1e6,
+                 f"img/s={n_images / t_naive:.1f} traces={traces} "
+                 f"bucketed_speedup={t_naive / t_served:.1f}x"))
     return rows

@@ -13,9 +13,10 @@ every subsequent call a straight executable invocation.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Any
+from typing import Any, Iterable
 
 import jax
 import jax.numpy as jnp
@@ -183,6 +184,19 @@ class Network:
         return CompiledNetwork(self, params, batch_size, dtype=dtype,
                                donate_params=donate_params)
 
+    def compile_cache(self, params: dict,
+                      buckets: Iterable[int] = (1, 2, 4, 8), *,
+                      dtype=jnp.float32) -> "CompileCache":
+        """Bucketed compilation cache for ragged serving traffic.
+
+        Each bucket batch size lazily compiles its own `CompiledNetwork`
+        (one jit trace per bucket, ever); `CompileCache.run(x)` pads a
+        ragged batch up to the smallest bucket that fits and slices the
+        real rows back out.  The serving frontend
+        (`repro.serve.frontend.CNNServingEngine`) dispatches through this.
+        """
+        return CompileCache(self, params, buckets, dtype=dtype)
+
 
 class CompiledNetwork:
     """Compile-once inference artifact for a planned Darknet `Network`.
@@ -227,6 +241,9 @@ class CompiledNetwork:
         if x.shape != self.in_spec.shape:
             raise ValueError(f"compiled for input {self.in_spec.shape}, "
                              f"got {x.shape}")
+        if jnp.dtype(x.dtype) != self.in_spec.dtype:
+            raise ValueError(f"compiled for dtype {self.in_spec.dtype}, "
+                             f"got {jnp.dtype(x.dtype)}")
         p = self.params if params is None else params
         return self._compiled(p, x)
 
@@ -252,3 +269,112 @@ class CompiledNetwork:
                 "batch_size": self.batch_size,
                 "trace_count": self._trace_count,
                 "op_counts": dict(self.op_counts)}
+
+
+class CompileCache:
+    """Keyed cache of `CompiledNetwork` executables for ragged batches.
+
+    Buckets are the supported compiled batch sizes.  `run(x)` picks the
+    smallest bucket >= len(x), zero-pads the batch up to it, dispatches ONE
+    compiled call, and slices the real rows back — so a ragged request
+    stream compiles each bucket exactly once (lazily, on first use) instead
+    of once per distinct batch size.  Batches larger than the top bucket
+    split into top-bucket chunks.
+
+    Padding is sound because every planned layer is row-independent across
+    the batch dim (conv/pool/connected/softmax all act per-image), so the
+    real rows of a padded dispatch are bitwise identical to an exact-batch
+    execution — tests/test_compile_cache.py asserts this.
+
+    Observability: `hits`/`misses` count bucket-cache lookups, `stats()`
+    reports traces, the per-bucket dispatch histogram, and the pad-waste
+    fraction (padded rows / total dispatched rows).
+    """
+
+    def __init__(self, net: Network, params: dict,
+                 buckets: Iterable[int] = (1, 2, 4, 8), *,
+                 dtype=jnp.float32):
+        bs = tuple(sorted({int(b) for b in buckets}))
+        if not bs or bs[0] < 1:
+            raise ValueError(f"buckets must be positive ints, got {buckets}")
+        self.net = net
+        self.params = params
+        self.buckets = bs
+        self.dtype = jnp.dtype(dtype)
+        self._compiled: dict[int, CompiledNetwork] = {}
+        self.hits = 0
+        self.misses = 0
+        self._dispatches = collections.Counter()  # bucket -> n dispatches
+        self._rows_real = 0
+        self._rows_pad = 0
+
+    def bucket_for(self, n: int) -> int | None:
+        """Smallest bucket >= n, or None when n exceeds the top bucket."""
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return None
+
+    def get(self, bucket: int) -> CompiledNetwork:
+        """The compiled executable for a bucket (lazy compile on miss)."""
+        if bucket not in self.buckets:
+            raise ValueError(f"{bucket} is not a bucket; have {self.buckets}")
+        cn = self._compiled.get(bucket)
+        if cn is None:
+            self.misses += 1
+            cn = self.net.compile(self.params, batch_size=bucket,
+                                  dtype=self.dtype)
+            self._compiled[bucket] = cn
+        else:
+            self.hits += 1
+        return cn
+
+    def run(self, x):
+        """Dispatch a ragged batch: pad to bucket, one compiled call, slice.
+
+        x: (n, H, W, C) with the cache dtype; n >= 1.  Batches above the top
+        bucket are processed in top-bucket chunks and concatenated.
+        """
+        n = x.shape[0]
+        if n == 0:
+            raise ValueError("empty batch")
+        if jnp.dtype(x.dtype) != self.dtype:
+            raise ValueError(f"cache compiled for dtype {self.dtype}, "
+                             f"got {jnp.dtype(x.dtype)}")
+        top = self.buckets[-1]
+        if n > top:
+            return jnp.concatenate(
+                [self.run(x[i:i + top]) for i in range(0, n, top)], axis=0)
+        b = self.bucket_for(n)
+        cn = self.get(b)
+        xb = x if b == n else jnp.concatenate(
+            [x, jnp.zeros((b - n,) + x.shape[1:], self.dtype)], axis=0)
+        y = cn(xb)
+        self._dispatches[b] += 1
+        self._rows_real += n
+        self._rows_pad += b - n
+        return y[:n]
+
+    @property
+    def trace_count(self) -> int:
+        return sum(cn.trace_count for cn in self._compiled.values())
+
+    def warmup(self) -> "CompileCache":
+        """Eagerly compile + warm every bucket (otherwise lazy)."""
+        for b in self.buckets:
+            self.get(b).warmup()
+        return self
+
+    def stats(self) -> dict:
+        total = self._rows_real + self._rows_pad
+        return {
+            "buckets": self.buckets,
+            "compiled": tuple(sorted(self._compiled)),
+            "traces": self.trace_count,
+            "hits": self.hits,
+            "misses": self.misses,
+            "dispatches": dict(self._dispatches),
+            "rows_real": self._rows_real,
+            "rows_padded": self._rows_pad,
+            "pad_waste": (self._rows_pad / total) if total else 0.0,
+        }

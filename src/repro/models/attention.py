@@ -6,6 +6,9 @@ in static chunks and KV streams through an online-softmax scan — the same
 as the paper's GEMM engine (kernels/flash_attention.py is the Pallas TPU
 version of exactly this loop; this file is the distribution-aware jnp
 formulation that GSPMD can shard, used for lowering at 512 devices).
+Off-mesh (single device), GQA prefill routes through the registry
+`attention` op instead — the kernel-backed path — and the blockwise
+formulation engages only when a mesh is installed.
 
 Sharding modes (chosen per arch by sharding/policy.py):
   heads : KV-head-parallel — zero attention comm, used when n_kv_heads
@@ -125,8 +128,16 @@ def gqa_init(key, cfg):
 
 def gqa_forward(engine: ComputeEngine, p, x, cos, sin, cfg, *,
                 shard_mode: str = "seq", n_q_chunks: int = 8,
-                return_kv: bool = False):
-    """x: (B, S, D) -> (B, S, D).  Full-sequence (train / prefill)."""
+                return_kv: bool = False, kernel_attention: bool = True):
+    """x: (B, S, D) -> (B, S, D).  Full-sequence (train / prefill).
+
+    Off-mesh with ``kernel_attention`` (the default), attention dispatches
+    the registry `attention` op — the kernel-backed inference path.  Pass
+    ``kernel_attention=False`` on differentiated paths (training): the
+    Pallas flash kernel has no VJP, while the blockwise jnp formulation is
+    differentiable under every backend.  Under a mesh the blockwise GSPMD
+    path is always used.
+    """
     B, S, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     q = engine.matmul(x, p["wq"], shift=p.get("bq"))
@@ -138,9 +149,19 @@ def gqa_forward(engine: ComputeEngine, p, x, cos, sin, cfg, *,
     if cos is not None:
         q = rope_apply(q, cos, sin)
         k = rope_apply(k, cos, sin)
-    qg = q.reshape(B, S, KV, H // KV, hd)
-    y = blockwise_attention(engine, qg, k, v, causal=cfg.causal,
-                            n_q_chunks=n_q_chunks, shard_mode=shard_mode)
+    if kernel_attention and not hints.mesh_active():
+        # Single-device prefill: the kernel-backed registry `attention` op
+        # (flash kernel under the pallas backend).  KV heads broadcast to H
+        # in the same kv*G+g order the grouped reshape below uses.
+        kb = jnp.repeat(k, H // KV, axis=2)
+        vb = jnp.repeat(v, H // KV, axis=2)
+        y = engine.attention(q, kb, vb, causal=cfg.causal)
+    else:
+        # Mesh installed: the distribution-aware blockwise formulation that
+        # GSPMD shards (heads- or sequence-parallel per shard_mode).
+        qg = q.reshape(B, S, KV, H // KV, hd)
+        y = blockwise_attention(engine, qg, k, v, causal=cfg.causal,
+                                n_q_chunks=n_q_chunks, shard_mode=shard_mode)
     y = y.reshape(B, S, H * hd)
     y = hints.shard(y, "dp", None, "model")
     out = engine.matmul(y, p["wo"])

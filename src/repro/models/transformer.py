@@ -189,11 +189,13 @@ def _embed_inputs(engine, cfg, params, tokens=None, patch_embeds=None,
     return hints.shard(h, "dp", None, None)
 
 
-def _dense_layer(engine, cfg, lp, h, cos, sin, shard_mode, n_q_chunks):
+def _dense_layer(engine, cfg, lp, h, cos, sin, shard_mode, n_q_chunks,
+                 kernel_attention=True):
     a = attn.gqa_forward(engine, lp["attn"],
                          norm_apply(cfg.norm, lp["norm1"], h, cfg.norm_eps),
                          cos, sin, cfg, shard_mode=shard_mode,
-                         n_q_chunks=n_q_chunks)
+                         n_q_chunks=n_q_chunks,
+                         kernel_attention=kernel_attention)
     h = h + a
     m = mlp_forward(engine, lp["mlp"],
                     norm_apply(cfg.norm, lp["norm2"], h, cfg.norm_eps),
@@ -215,11 +217,13 @@ def _mla_layer(engine, cfg, lp, h, cos, sin, n_q_chunks, use_moe):
     return h + m, aux
 
 
-def _gqa_moe_layer(engine, cfg, lp, h, cos, sin, shard_mode, n_q_chunks):
+def _gqa_moe_layer(engine, cfg, lp, h, cos, sin, shard_mode, n_q_chunks,
+                   kernel_attention=True):
     a = attn.gqa_forward(engine, lp["attn"],
                          norm_apply(cfg.norm, lp["norm1"], h, cfg.norm_eps),
                          cos, sin, cfg, shard_mode=shard_mode,
-                         n_q_chunks=n_q_chunks)
+                         n_q_chunks=n_q_chunks,
+                         kernel_attention=kernel_attention)
     h = h + a
     m, aux = moe_mod.moe_forward(
         engine, lp["moe"],
@@ -235,7 +239,7 @@ def _mamba_layer(engine, cfg, lp, h):
 
 
 def _shared_block(engine, cfg, sp, h, emb0, cos, sin, shard_mode,
-                  n_q_chunks):
+                  n_q_chunks, kernel_attention=True):
     """Zamba2 shared attention+MLP block (weights reused per invocation)."""
     from repro.models.common import rmsnorm
     x = jnp.concatenate([h, emb0], axis=-1)
@@ -244,7 +248,8 @@ def _shared_block(engine, cfg, sp, h, emb0, cos, sin, shard_mode,
     a = attn.gqa_forward(engine, sp["attn"],
                          norm_apply(cfg.norm, sp["norm1"], x, cfg.norm_eps),
                          cos, sin, cfg, shard_mode=shard_mode,
-                         n_q_chunks=n_q_chunks)
+                         n_q_chunks=n_q_chunks,
+                         kernel_attention=kernel_attention)
     x = x + a
     m = mlp_forward(engine, sp["mlp"],
                     norm_apply(cfg.norm, sp["norm2"], x, cfg.norm_eps),
@@ -255,8 +260,14 @@ def _shared_block(engine, cfg, sp, h, emb0, cos, sin, shard_mode,
 
 def forward_hidden(engine: ComputeEngine, cfg, params, *, tokens=None,
                    patch_embeds=None, frames=None, remat: bool = True,
-                   n_q_chunks: int = 8):
-    """Full-sequence forward to final hidden states (B, S, D)."""
+                   n_q_chunks: int = 8, kernel_attention: bool = True):
+    """Full-sequence forward to final hidden states (B, S, D).
+
+    ``kernel_attention=False`` keeps GQA attention on the differentiable
+    blockwise formulation off-mesh (required under autodiff: the Pallas
+    flash kernel has no VJP) — loss_fn sets it; inference callers keep the
+    kernel-backed default.
+    """
     h = _embed_inputs(engine, cfg, params, tokens, patch_embeds, frames)
     S = h.shape[1]
     shard_mode = attn_shard_mode(cfg)
@@ -279,7 +290,8 @@ def forward_hidden(engine: ComputeEngine, cfg, params, *, tokens=None,
 
                 (hh, aux), _ = jax.lax.scan(inner, (hh, aux), lps)
                 hh = _shared_block(engine, cfg, params["shared"], hh, emb0,
-                                   cos, sin, shard_mode, n_q_chunks)
+                                   cos, sin, shard_mode, n_q_chunks,
+                                   kernel_attention)
                 return (hh, aux), None
 
             body = jax.checkpoint(super_body) if remat else super_body
@@ -290,7 +302,8 @@ def forward_hidden(engine: ComputeEngine, cfg, params, *, tokens=None,
             hh, aux = carry
             if kind == "dense":
                 hh, a = _dense_layer(engine, cfg, lp, hh, cos, sin,
-                                     shard_mode, n_q_chunks)
+                                     shard_mode, n_q_chunks,
+                                     kernel_attention)
             elif kind == "mla_dense":
                 hh, a = _mla_layer(engine, cfg, lp, hh, cos, sin,
                                    n_q_chunks, use_moe=False)
@@ -299,7 +312,8 @@ def forward_hidden(engine: ComputeEngine, cfg, params, *, tokens=None,
                                    n_q_chunks, use_moe=True)
             elif kind == "gqa_moe":
                 hh, a = _gqa_moe_layer(engine, cfg, lp, hh, cos, sin,
-                                       shard_mode, n_q_chunks)
+                                       shard_mode, n_q_chunks,
+                                       kernel_attention)
             elif kind == "mamba":
                 hh, a = _mamba_layer(engine, cfg, lp, hh)
             else:
@@ -486,7 +500,7 @@ def loss_fn(engine: ComputeEngine, cfg, params, batch, *,
     h, aux = forward_hidden(
         engine, cfg, params, tokens=batch.get("tokens"),
         patch_embeds=batch.get("patch_embeds"), frames=batch.get("frames"),
-        remat=remat, n_q_chunks=n_q_chunks)
+        remat=remat, n_q_chunks=n_q_chunks, kernel_attention=False)
     w_head = head_weight(params, cfg)
     ce = chunked_cross_entropy(engine, h, w_head, batch["labels"],
                                vocab_real=cfg.vocab_size, chunk=ce_chunk)

@@ -7,10 +7,18 @@ their prompt replays through the same decode program into that slot's cache
 rows (per-slot vmapped dynamic-update-slice); finished slots (EOS/max_new/
 max_len) free immediately.  vLLM-style continuous batching reduced to its
 JAX-native core: one compiled program, host-side slot bookkeeping.
+
+Implements the shared `ServingFrontend` protocol (serve/frontend.py):
+`submit/step/run/stats` with the same stats schema as the CNN engine, so
+one serving surface covers both workloads.  Prompts longer than the KV
+cache are rejected at `submit` (or truncated with `req.truncated` set,
+under ``on_overflow="truncate"``) — they can never be served without
+silently clobbering cache rows.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 
 import jax
@@ -19,23 +27,28 @@ import numpy as np
 
 from repro.core import ComputeEngine, backends
 from repro.serve import kvcache
+from repro.serve import frontend as fe
 from repro.serve.serve_step import make_decode_step
 
 
 @dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: list[int]
+class Request(fe.Request):
+    """LM generation request; `out` accumulates generated token ids."""
+    prompt: list[int] = dataclasses.field(default_factory=list)
     max_new: int = 16
     out: list[int] = dataclasses.field(default_factory=list)
-    done: bool = False
 
 
-class ServingEngine:
+class ServingEngine(fe.ServingFrontend):
     def __init__(self, cfg, params, *, engine: ComputeEngine, slots: int = 4,
-                 max_len: int = 128, eos_id: int | None = None):
+                 max_len: int = 128, eos_id: int | None = None,
+                 on_overflow: str = "reject"):
+        if on_overflow not in ("reject", "truncate"):
+            raise ValueError(f"on_overflow must be 'reject' or 'truncate', "
+                             f"got {on_overflow!r}")
         self.cfg, self.params = cfg, params
         self.slots, self.max_len, self.eos_id = slots, max_len, eos_id
+        self.on_overflow = on_overflow
         self.caches = kvcache.cache_init(cfg, slots, max_len)
         self._decode = jax.jit(make_decode_step(engine, cfg))
         self.pos = np.zeros(slots, np.int32)          # next write position
@@ -46,9 +59,39 @@ class ServingEngine:
         # Static engine-op plan of one decode step, captured from the
         # registry's trace-time counters on the first (tracing) call.
         self.op_counts: dict | None = None
+        self._submitted = 0
+        self._completed = 0
+        self._rejected = 0
+        self._truncated = 0
+        self._steps = 0
+        self._tokens = 0
+        self._wall_s = 0.0
+        self._latency = fe.LatencyAgg()
 
     def submit(self, req: Request):
+        if len(req.prompt) > self.max_len:
+            # A longer prompt would replay past the cache end: the write at
+            # pos == max_len clamps onto the last row and corrupts it.
+            if self.on_overflow == "reject":
+                self._rejected += 1
+                raise ValueError(
+                    f"prompt length {len(req.prompt)} exceeds the KV cache "
+                    f"(max_len={self.max_len}); shorten the prompt or build "
+                    f"the engine with on_overflow='truncate'")
+            # Keep the prompt TAIL (the most recent context), as much as
+            # fits while still delivering the full max_new budget — a
+            # prompt of L can generate max_len - L + 1 tokens (the first
+            # comes from the last prefill step's logits).  When max_new
+            # alone exceeds the cache, prompt retention wins and
+            # generation caps at 1 token.
+            keep = (self.max_len - req.max_new + 1
+                    if req.max_new < self.max_len else self.max_len)
+            req.prompt = req.prompt[-keep:]
+            req.truncated = True
+            self._truncated += 1
+        req.t_submit = time.perf_counter()
         self.pending.append(req)
+        self._submitted += 1
 
     def _admit(self):
         for s in range(self.slots):
@@ -60,6 +103,7 @@ class ServingEngine:
 
     def step(self) -> int:
         """One lockstep decode across all slots (idle slots ride along)."""
+        t0 = time.perf_counter()
         self._admit()
         n_active = sum(r is not None for r in self.active)
         if n_active == 0:
@@ -77,6 +121,7 @@ class ServingEngine:
         if snap is not None:
             self.op_counts = backends.counts_since(snap)
         nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1), np.int32)
+        now = time.perf_counter()
         for s, req in enumerate(self.active):
             if req is None:
                 continue
@@ -85,19 +130,27 @@ class ServingEngine:
             if self._replay[s]:
                 continue  # still prefilling this slot
             req.out.append(int(nxt[s]))
+            self._tokens += 1
             if (len(req.out) >= req.max_new
                     or (self.eos_id is not None
                         and req.out[-1] == self.eos_id)
                     or self.pos[s] >= self.max_len):
                 req.done = True
+                req.t_done = now
+                self._latency.add(req.latency_s)
+                self._completed += 1
                 self.active[s] = None
+        self._steps += 1
+        self._wall_s += now - t0
         return n_active
 
-    def run(self, requests: list[Request], max_steps: int = 10_000
-            ) -> list[Request]:
-        for r in requests:
-            self.submit(r)
-        for _ in range(max_steps):
-            if self.step() == 0 and not self.pending:
-                break
-        return requests
+    def stats(self) -> dict:
+        return fe.build_stats(
+            engine="lm", submitted=self._submitted,
+            completed=self._completed, rejected=self._rejected,
+            truncated=self._truncated, steps=self._steps,
+            wall_s=self._wall_s, latency=self._latency,
+            items=self._tokens,
+            extra={"tokens": self._tokens, "slots": self.slots,
+                   "max_len": self.max_len,
+                   "op_counts": dict(self.op_counts or {})})

@@ -1,0 +1,207 @@
+"""Shared serving frontend: one submit/step/run/stats surface for all
+workloads.
+
+The paper's framework is an inference accelerator: compile the network once,
+then feed it a stream of requests.  This module is the traffic side of that
+deployment shape — a `ServingFrontend` protocol every serving engine
+implements (the slot-based LM `ServingEngine` in serve/engine.py and the
+micro-batching `CNNServingEngine` here), a shared `Request` base carrying
+identity + lifecycle + latency timestamps, and one stats schema
+(`STATS_KEYS`) so dashboards and benchmarks read CNN and LM engines
+identically.
+
+`CNNServingEngine` is the CNN twin of the LM slot model: instead of slots
+decoding in lockstep, it drains its request queue into padded-bucket
+dispatches through a `CompileCache` — each step stacks up to top-bucket
+images, pads to the smallest compiled bucket that fits, runs ONE compiled
+call, and completes every request in the batch.  Per-request latency and
+aggregate images/sec come out of `stats()`.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+import time
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.darknet.network import CompileCache
+
+# Every ServingFrontend.stats() dict carries at least these keys; "requests"
+# is itself a dict with the REQUEST_KEYS counters and "latency_s" a dict
+# with the LATENCY_KEYS aggregates.  Engine-specific extras ride alongside.
+STATS_KEYS = ("engine", "requests", "steps", "wall_s", "latency_s",
+              "throughput")
+REQUEST_KEYS = ("submitted", "completed", "rejected", "truncated")
+LATENCY_KEYS = ("avg", "max")
+
+
+@dataclasses.dataclass
+class Request:
+    """Base serving request: identity, lifecycle, latency timestamps.
+
+    Engines set `t_submit` at admission to the frontend and `t_done` at
+    completion; `latency_s` is the queueing + execution time in between.
+    Lifecycle fields are keyword-only so subclass payload fields (prompt,
+    image, ...) keep their positional slots right after `rid`.
+    """
+    rid: int
+    done: bool = dataclasses.field(default=False, kw_only=True)
+    truncated: bool = dataclasses.field(default=False, kw_only=True)
+    t_submit: float = dataclasses.field(default=float("nan"), kw_only=True)
+    t_done: float = dataclasses.field(default=float("nan"), kw_only=True)
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_submit
+
+
+@dataclasses.dataclass
+class ImageRequest(Request):
+    """One image through a compiled CNN; `result` holds the network output."""
+    image: np.ndarray | None = None
+    result: np.ndarray | None = None
+
+
+class ServingFrontend(abc.ABC):
+    """The serving protocol: `submit(req)`, `step() -> work`, `run(reqs)`,
+    `stats() -> dict` (STATS_KEYS schema).
+
+    `step()` returns the number of requests it advanced (0 = fully idle),
+    so `run` is engine-agnostic: submit everything, step until idle.
+
+    `submit` raises ValueError on an inadmissible request (bad image shape,
+    prompt overflowing the KV cache); `run` catches that per request —
+    rejections are counted in `stats()` and the request stays `done=False`
+    — so one bad request cannot strand the rest of a batch.
+    """
+
+    @abc.abstractmethod
+    def submit(self, req: Request) -> None:
+        ...
+
+    @abc.abstractmethod
+    def step(self) -> int:
+        ...
+
+    @abc.abstractmethod
+    def stats(self) -> dict:
+        ...
+
+    def run(self, requests: list, max_steps: int = 10_000) -> list:
+        for r in requests:
+            try:
+                self.submit(r)
+            except ValueError:
+                pass  # rejected: counted in stats, left not-done
+        for _ in range(max_steps):
+            if self.step() == 0:
+                break
+        return requests
+
+
+class LatencyAgg:
+    """Running per-request latency aggregate (sum/max/count) — O(1) state
+    for long-running servers, no per-request history kept."""
+
+    def __init__(self):
+        self.sum = 0.0
+        self.max = 0.0
+        self.count = 0
+
+    def add(self, latency_s: float) -> None:
+        self.sum += latency_s
+        self.max = max(self.max, latency_s)
+        self.count += 1
+
+    def summary(self) -> dict:
+        return {"avg": (self.sum / self.count) if self.count else 0.0,
+                "max": self.max}
+
+
+def build_stats(*, engine: str, submitted: int, completed: int,
+                rejected: int, truncated: int, steps: int, wall_s: float,
+                latency: LatencyAgg, items: int,
+                extra: dict | None = None) -> dict:
+    """Assemble the shared stats dict; `items` is the engine's throughput
+    unit (images for CNN, generated tokens for LM)."""
+    stats = {
+        "engine": engine,
+        "requests": {"submitted": submitted, "completed": completed,
+                     "rejected": rejected, "truncated": truncated},
+        "steps": steps,
+        "wall_s": wall_s,
+        "latency_s": latency.summary(),
+        "throughput": (items / wall_s) if wall_s > 0 else 0.0,
+    }
+    if extra:
+        stats.update(extra)
+    return stats
+
+
+class CNNServingEngine(ServingFrontend):
+    """Micro-batching CNN server over a bucketed `CompileCache`.
+
+    submit() queues `ImageRequest`s (shape-checked against the network's
+    input plan); each step() drains up to top-bucket requests, stacks them
+    into one ragged batch, and dispatches through `CompileCache.run` — the
+    pad/slice and the one-trace-per-bucket guarantee live there.
+    """
+
+    def __init__(self, cache: CompileCache):
+        self.cache = cache
+        self.max_batch = cache.buckets[-1]
+        self.in_shape = tuple(cache.net.in_shape)  # (H, W, C)
+        self.pending: deque[ImageRequest] = deque()
+        self._submitted = 0
+        self._completed = 0
+        self._rejected = 0
+        self._steps = 0
+        self._wall_s = 0.0
+        self._latency = LatencyAgg()
+
+    def submit(self, req: ImageRequest) -> None:
+        try:
+            img = np.asarray(req.image)
+        except (ValueError, TypeError) as e:
+            self._rejected += 1  # count before raising: run() swallows it
+            raise ValueError(f"bad image payload: {e}") from e
+        if tuple(img.shape) != self.in_shape:
+            self._rejected += 1
+            raise ValueError(f"image shape {tuple(img.shape)} != network "
+                             f"input {self.in_shape}")
+        req.image = img.astype(self.cache.dtype, copy=False)
+        req.t_submit = time.perf_counter()
+        self.pending.append(req)
+        self._submitted += 1
+
+    def step(self) -> int:
+        """Drain one micro-batch through the compile cache."""
+        if not self.pending:
+            return 0
+        t0 = time.perf_counter()
+        batch = [self.pending.popleft()
+                 for _ in range(min(self.max_batch, len(self.pending)))]
+        x = jnp.asarray(np.stack([r.image for r in batch]))
+        y = np.asarray(jax.block_until_ready(self.cache.run(x)))
+        t1 = time.perf_counter()
+        for i, r in enumerate(batch):
+            r.result = y[i]
+            r.done = True
+            r.t_done = t1
+            self._latency.add(r.latency_s)
+        self._completed += len(batch)
+        self._steps += 1
+        self._wall_s += t1 - t0
+        return len(batch)
+
+    def stats(self) -> dict:
+        return build_stats(
+            engine="cnn", submitted=self._submitted,
+            completed=self._completed, rejected=self._rejected, truncated=0,
+            steps=self._steps, wall_s=self._wall_s,
+            latency=self._latency, items=self._completed,
+            extra={"images": self._completed, "cache": self.cache.stats()})

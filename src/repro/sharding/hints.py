@@ -62,6 +62,13 @@ def _current_axis_names():
     return tuple(phys.axis_names)
 
 
+def mesh_active() -> bool:
+    """True when a device mesh is installed (sharding hints will apply);
+    model code uses this to pick between the GSPMD-shardable formulation
+    and the single-device kernel-backed registry op."""
+    return bool(_current_axis_names())
+
+
 def resolve(tag):
     """Logical tag -> mesh axis (or None if absent from current mesh)."""
     names = _current_axis_names()

@@ -183,6 +183,17 @@ def test_compiled_network_rejects_wrong_batch():
         cn(_rand(1, (3, 16, 16, 3)))
 
 
+def test_compiled_network_rejects_wrong_dtype():
+    """A float64 input used to slip through to a confusing XLA error; the
+    artifact now validates dtype alongside shape."""
+    net = Network(TWO_CONV_CFG, make_engine("xla"))
+    params = net.init(jax.random.PRNGKey(0))
+    cn = net.compile(params, batch_size=2)
+    x64 = np.asarray(_rand(1, (2, 16, 16, 3)), np.float64)
+    with pytest.raises(ValueError, match="compiled for dtype"):
+        cn(x64)
+
+
 @pytest.mark.slow
 def test_darknet_reference_net_compiles_once():
     """The benchmark path: the darknet-19 reference net through

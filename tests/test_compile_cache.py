@@ -1,0 +1,119 @@
+"""Bucketed CompileCache: padded-bucket dispatch correctness + trace economy.
+
+Acceptance: a ragged request stream (batch sizes 1..top bucket) triggers
+exactly one trace per bucket, and the real rows of every padded dispatch
+match an exact-batch `CompiledNetwork` bitwise, across `ref`/`xla`.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_engine
+from repro.core.darknet.network import CompileCache, Network
+
+CFG = """
+[net]
+height=12
+width=12
+channels=3
+
+[convolutional]
+batch_normalize=1
+filters=8
+size=3
+stride=1
+pad=1
+activation=leaky
+
+[maxpool]
+size=2
+stride=2
+
+[convolutional]
+filters=4
+size=3
+stride=2
+pad=1
+activation=leaky
+
+[avgpool]
+
+[connected]
+output=10
+activation=linear
+
+[softmax]
+"""
+
+
+def _net(backend):
+    net = Network(CFG, make_engine(backend, "fp32_strict"))
+    return net, net.init(jax.random.PRNGKey(0))
+
+
+def _x(b, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(
+        (b, 12, 12, 3)).astype(np.float32))
+
+
+@pytest.mark.parametrize("backend", ["ref", "xla"])
+def test_ragged_stream_bitwise_parity_and_one_trace_per_bucket(backend):
+    net, params = _net(backend)
+    cache = net.compile_cache(params, buckets=(1, 2, 4))
+    # ragged stream covering every batch size 1..top bucket, twice
+    for seed, b in enumerate([1, 2, 3, 4, 1, 2, 3, 4]):
+        x = _x(b, seed)
+        got = cache.run(x)
+        want = net.compile(params, batch_size=b)(x)  # exact-batch oracle
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    st = cache.stats()
+    # each bucket compiled exactly once, lazily: 3 misses, 5 hits, 3 traces
+    assert st["traces"] == 3
+    assert st["compiled"] == (1, 2, 4)
+    assert st["misses"] == 3
+    assert st["hits"] == 5
+    # bucket histogram: b=3 pads into the 4-bucket
+    assert st["dispatches"] == {1: 2, 2: 2, 4: 4}
+    assert st["rows_padded"] == 2                    # two b=3 dispatches
+    assert st["pad_waste"] == pytest.approx(2 / 22)
+    for cn in cache._compiled.values():
+        assert cn.trace_count == 1
+
+
+def test_oversize_batch_splits_into_top_bucket_chunks():
+    net, params = _net("xla")
+    cache = net.compile_cache(params, buckets=(2, 4))
+    x = _x(11)
+    got = cache.run(x)
+    want = net.compile(params, batch_size=11)(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    st = cache.stats()
+    assert st["dispatches"] == {4: 3}                # 4 + 4 + 3(padded)
+    assert st["traces"] == 1
+
+
+def test_run_validates_dtype_and_rejects_empty():
+    net, params = _net("xla")
+    cache = net.compile_cache(params, buckets=(2,))
+    with pytest.raises(ValueError, match="dtype"):
+        cache.run(np.asarray(_x(2), np.float64))  # float64 slips past jnp
+    with pytest.raises(ValueError, match="empty"):
+        cache.run(_x(2)[:0])
+
+
+def test_bad_buckets_rejected():
+    net, params = _net("xla")
+    with pytest.raises(ValueError, match="buckets"):
+        CompileCache(net, params, buckets=())
+    with pytest.raises(ValueError, match="buckets"):
+        CompileCache(net, params, buckets=(0, 2))
+
+
+def test_warmup_compiles_every_bucket_eagerly():
+    net, params = _net("xla")
+    cache = net.compile_cache(params, buckets=(1, 2)).warmup()
+    assert cache.stats()["compiled"] == (1, 2)
+    assert cache.trace_count == 2
+    cache.run(_x(2))
+    assert cache.trace_count == 2                    # no retrace

@@ -9,10 +9,11 @@ try:
 except ImportError:  # optional dev dep — property tests skip without it
     from hypothesis_stub import given, settings, st
 
-from repro.core import make_engine
+from repro.core import backends, make_engine
 from repro.kernels import ref as kref
+from repro.launch.mesh import make_mesh, set_mesh
 from repro.models import ssm as ssm_mod
-from repro.models.attention import blockwise_attention
+from repro.models.attention import blockwise_attention, gqa_forward, gqa_init
 from repro.models.common import chunked_cross_entropy, rope_apply, rope_table
 from repro.models.moe import capacity, moe_forward, moe_init
 from repro.configs.base import get_arch, reduced
@@ -60,6 +61,32 @@ def test_blockwise_attention_chunk_invariance():
                             kv_chunk=64)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
                                atol=2e-5)
+
+
+def test_gqa_prefill_routes_through_registry_attention_off_mesh():
+    """Single-device prefill dispatches the registry `attention` op; with a
+    mesh installed the GSPMD blockwise formulation engages instead — and the
+    two paths agree numerically."""
+    cfg = reduced(get_arch("qwen2-0.5b"))
+    p = gqa_init(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 32
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model),
+                          jnp.float32)
+    cos, sin = rope_table(jnp.arange(S), cfg.head_dim, cfg.rope_theta)
+
+    snap = backends.dispatch_counts()
+    y_off = gqa_forward(ENGINE, p, x, cos, sin, cfg)
+    off_counts = backends.counts_since(snap)
+    assert off_counts.get(("xla", "attention")) == 1
+
+    mesh = make_mesh((1,), ("data",))
+    with set_mesh(mesh):
+        snap = backends.dispatch_counts()
+        y_on = gqa_forward(ENGINE, p, x, cos, sin, cfg)
+        on_counts = backends.counts_since(snap)
+    assert ("xla", "attention") not in on_counts   # blockwise path
+    np.testing.assert_allclose(np.asarray(y_off), np.asarray(y_on),
+                               rtol=2e-4, atol=2e-4)
 
 
 # --------------------------------------------------------------- RoPE -----

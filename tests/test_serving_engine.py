@@ -3,6 +3,7 @@ equivalence with sequential single-request decoding."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.base import get_arch, reduced
 from repro.core import make_engine
@@ -72,3 +73,48 @@ def test_slots_are_isolated():
     eng.run(reqs)
     assert all(r.done for r in reqs)
     assert [len(r.out) for r in reqs] == [12, 2, 4]
+
+
+def test_prompt_longer_than_cache_rejected_at_submit():
+    """Regression: a prompt longer than max_len used to replay past the KV
+    cache end, silently clobbering the last cache row.  Now it is rejected
+    at submit before touching a slot."""
+    cfg, params = _setup()
+    eng = ServingEngine(cfg, params, engine=ENGINE, slots=1, max_len=8)
+    with pytest.raises(ValueError, match="exceeds the KV cache"):
+        eng.submit(Request(rid=0, prompt=list(range(9)), max_new=2))
+    assert eng.stats()["requests"]["rejected"] == 1
+    assert not eng.pending                      # nothing admitted
+    # a max_len-length prompt is the boundary: admitted, 1 token generated
+    ok = Request(rid=1, prompt=list(range(8)), max_new=4)
+    eng.run([ok])
+    assert ok.done and len(ok.out) == 1
+
+
+def test_prompt_overflow_truncates_with_flag_when_configured():
+    cfg, params = _setup()
+    eng = ServingEngine(cfg, params, engine=ENGINE, slots=1, max_len=8,
+                        on_overflow="truncate")
+    req = Request(rid=0, prompt=list(range(20)), max_new=4)
+    eng.run([req])
+    assert req.done
+    assert req.truncated
+    assert req.prompt == list(range(15, 20))  # tail, max_len - max_new + 1
+    assert len(req.out) == 4           # full generation budget delivered
+    # max_new >= max_len: prompt retention wins, generation caps at 1
+    big = Request(rid=1, prompt=list(range(20)), max_new=8)
+    eng2 = ServingEngine(cfg, params, engine=ENGINE, slots=1, max_len=8,
+                         on_overflow="truncate")
+    eng2.run([big])
+    assert big.done and big.truncated
+    assert big.prompt == list(range(12, 20))   # full-cache tail
+    assert len(big.out) == 1
+    st = eng.stats()
+    assert st["requests"]["truncated"] == 1
+    assert st["requests"]["completed"] == 1
+
+
+def test_bad_overflow_policy_rejected():
+    cfg, params = _setup()
+    with pytest.raises(ValueError, match="on_overflow"):
+        ServingEngine(cfg, params, engine=ENGINE, on_overflow="ignore")

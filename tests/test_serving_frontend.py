@@ -1,0 +1,137 @@
+"""One serving surface for CNN and LM traffic: the `ServingFrontend`
+protocol, the micro-batching `CNNServingEngine`, and the shared stats
+schema both engines emit."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch, reduced
+from repro.core import make_engine
+from repro.core.darknet.network import Network
+from repro.models import transformer as tfm
+from repro.serve import frontend as fe
+from repro.serve.engine import Request as LMRequest
+from repro.serve.engine import ServingEngine
+
+ENGINE = make_engine("xla", "fp32_strict")
+
+CFG = """
+[net]
+height=12
+width=12
+channels=3
+
+[convolutional]
+batch_normalize=1
+filters=8
+size=3
+stride=1
+pad=1
+activation=leaky
+
+[convolutional]
+filters=4
+size=3
+stride=2
+pad=1
+activation=leaky
+"""
+
+
+def _cnn_engine(buckets=(1, 2, 4)):
+    net = Network(CFG, ENGINE)
+    params = net.init(jax.random.PRNGKey(0))
+    return net, params, fe.CNNServingEngine(
+        net.compile_cache(params, buckets=buckets))
+
+
+def _images(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal((12, 12, 3)).astype(np.float32)
+            for _ in range(n)]
+
+
+def test_cnn_engine_serves_ragged_traffic_correctly():
+    net, params, eng = _cnn_engine()
+    imgs = _images(7)
+    reqs = [fe.ImageRequest(rid=i, image=im) for i, im in enumerate(imgs)]
+    eng.run(reqs)
+    assert all(r.done for r in reqs)
+    # per-request results match a direct exact-batch compiled call
+    want = np.asarray(net.compile(params, batch_size=7)(jnp.stack(imgs)))
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(r.result, want[i])
+        assert r.latency_s >= 0.0
+    st = eng.stats()
+    assert st["requests"]["completed"] == 7
+    assert st["images"] == 7
+    assert st["throughput"] > 0
+    # 7 requests on top bucket 4 -> two micro-batch steps (4 then 3-padded)
+    assert st["steps"] == 2
+    assert st["cache"]["traces"] == len(st["cache"]["compiled"])
+
+
+def test_cnn_engine_rejects_wrong_image_shape():
+    _, _, eng = _cnn_engine()
+    with pytest.raises(ValueError, match="image shape"):
+        eng.submit(fe.ImageRequest(rid=0, image=np.zeros((8, 8, 3),
+                                                         np.float32)))
+    assert eng.stats()["requests"]["rejected"] == 1
+
+
+def test_cnn_engine_step_returns_zero_when_idle():
+    _, _, eng = _cnn_engine()
+    assert eng.step() == 0
+
+
+def test_run_serves_past_a_rejected_request():
+    """One inadmissible request must not strand the rest of the batch."""
+    _, _, eng = _cnn_engine()
+    good = [fe.ImageRequest(rid=i, image=im)
+            for i, im in enumerate(_images(2))]
+    bad = fe.ImageRequest(rid=9, image=np.zeros((8, 8, 3), np.float32))
+    eng.run([good[0], bad, good[1]])
+    assert all(r.done for r in good)
+    assert not bad.done
+    st = eng.stats()
+    assert st["requests"]["rejected"] == 1
+    assert st["requests"]["completed"] == 2
+
+
+def test_request_positional_construction_keeps_payload_slots():
+    """Lifecycle fields on the shared base are keyword-only, so positional
+    construction binds the payload right after rid (the pre-refactor LM
+    Request API)."""
+    r = LMRequest(0, [1, 2, 3], 5)
+    assert (r.prompt, r.max_new, r.done) == ([1, 2, 3], 5, False)
+    img = np.zeros((2, 2, 3), np.float32)
+    assert fe.ImageRequest(1, img).image is img
+
+
+def test_stats_schema_is_shared_across_cnn_and_lm_engines():
+    """The acceptance contract: both engines expose submit/step/run/stats
+    and emit the same stats schema."""
+    _, _, cnn = _cnn_engine()
+    cnn.run([fe.ImageRequest(rid=i, image=im)
+             for i, im in enumerate(_images(3))])
+
+    cfg = reduced(get_arch("qwen2-0.5b"))
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    lm = ServingEngine(cfg, params, engine=ENGINE, slots=2, max_len=32)
+    lm.run([LMRequest(rid=i, prompt=[1, 2, 3], max_new=2)
+            for i in range(2)])
+
+    for eng in (cnn, lm):
+        assert isinstance(eng, fe.ServingFrontend)
+        st = eng.stats()
+        assert set(fe.STATS_KEYS) <= set(st)
+        assert set(fe.REQUEST_KEYS) == set(st["requests"])
+        assert set(fe.LATENCY_KEYS) == set(st["latency_s"])
+        assert st["requests"]["completed"] == st["requests"]["submitted"]
+        assert st["latency_s"]["max"] >= st["latency_s"]["avg"] >= 0
+    assert cnn.stats()["engine"] == "cnn"
+    assert lm.stats()["engine"] == "lm"
+    # both request types share the frontend Request base (lifecycle+latency)
+    assert issubclass(LMRequest, fe.Request)
+    assert issubclass(fe.ImageRequest, fe.Request)
