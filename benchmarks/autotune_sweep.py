@@ -1,0 +1,84 @@
+"""Heuristic-vs-measured autotune sweep (docs/autotune.md).
+
+For each GEMM-shaped op key, resolves the heuristic block pick and the
+measured pick (policy "measure": time the candidate set, persist the winner
+to the per-device table), times both picks head-to-head, and reports the
+speedup.  Because the measured picks persist, a repeated run in a FRESH
+process serves every pick from disk and performs zero measurements — the
+`measured=` counter in the final row (and `--check-persisted`) makes that
+assertable:
+
+    PYTHONPATH=src python benchmarks/autotune_sweep.py            # measures
+    PYTHONPATH=src python benchmarks/autotune_sweep.py \
+        --check-persisted                                         # serves
+
+Point `REPRO_AUTOTUNE_CACHE` at a scratch dir to sweep from a cold table.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.core import autotune, backends
+from repro.kernels import ops as kernel_ops
+
+# (op, m, k, n): darknet-ish conv-as-GEMM problems plus ragged/skinny
+# shapes away from the heuristic's sweet spot.  Modest sizes so the sweep
+# stays tractable in CPU interpret mode.
+PROBLEMS = [
+    ("matmul", 512, 288, 128),     # early conv layer, im2col'd
+    ("matmul", 1024, 128, 256),
+    ("matmul", 333, 177, 99),      # ragged (paper §IV any-shape claim)
+    ("matmul", 64, 1024, 64),      # skinny reduction-heavy
+    ("bmm", 128, 128, 128),
+]
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    stats0 = backends.cache_stats()
+    pallas = backends.get_backend("pallas")
+    with backends.autotune_policy("measure"):
+        for op, m, k, n in PROBLEMS:
+            heur = kernel_ops.default_blocks(op, m, k, n, "float32")
+            pick = pallas.tiles(op, (m, k, n), "float32")
+            key = autotune.key_str(op, (m, k, n), "float32", "pallas")
+            rec = backends.autotune_report().get(key, {})
+            heur_ms = autotune.time_thunk(
+                kernel_ops.bench_thunk(op, m, k, n, "float32", heur))
+            pick_ms = autotune.time_thunk(
+                kernel_ops.bench_thunk(op, m, k, n, "float32", pick))
+            rows.append((
+                f"autotune_sweep/{op}_{m}x{k}x{n}", pick_ms * 1e3,
+                f"heur={'x'.join(map(str, heur))}:{heur_ms:.3f}ms "
+                f"pick={'x'.join(map(str, pick))}:{pick_ms:.3f}ms "
+                f"source={rec.get('source', '?')} "
+                f"speedup={heur_ms / pick_ms:.2f}x"))
+    st = backends.cache_stats()
+    rows.append(("autotune_sweep/cache", 0.0,
+                 f"measured={st['measured'] - stats0['measured']} "
+                 f"persisted={st['persisted'] - stats0['persisted']} "
+                 f"table={autotune.table_path()}"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--check-persisted", action="store_true",
+                    help="exit non-zero if any measurement ran (i.e. the "
+                         "per-device table did not serve every pick)")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    rows = run()
+    for row, us, derived in rows:
+        print(f"{row},{us:.1f},{derived}")
+    measured = backends.cache_stats()["measured"]
+    if args.check_persisted and measured:
+        print(f"FAIL: {measured} measurement(s) ran; expected all picks "
+              "served from the persisted per-device table", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,184 @@
+"""Measured autotuning: candidate timing + a per-device persisted table.
+
+fpgaConvNet and CNN2Gate close the gap to hand-tuned FPGA implementations
+by *measuring* design points in the tiling space instead of trusting a
+static heuristic.  This module supplies the two halves that the registry
+cache (core/backends.py) composes into a measured autotuner:
+
+  * a timing protocol — `time_thunk()`: warmup calls to absorb compilation,
+    then median-of-k wall clock of a `block_until_ready`-fenced compiled
+    call, so one noisy sample cannot crown the wrong candidate;
+  * a per-device persisted table — one JSON file per device fingerprint
+    (`device_kind` + JAX platform + table schema version) under
+    `~/.cache/repro_autotune/` (override with `REPRO_AUTOTUNE_CACHE`),
+    loaded lazily and written atomically (tempfile + `os.replace`), so a
+    second process on the same device serves every pick from disk and
+    performs **zero** measurements.
+
+Policy selection (`off | heuristic | measure`) and the in-process cache
+live in core/backends.py; this module knows nothing about backends or ops.
+A corrupted or stale table file is never fatal: it reads as empty and the
+caller falls back to measurement, then overwrites it with a valid table.
+
+Table file format (see docs/autotune.md for the full story):
+
+    {
+      "version": 1,
+      "fingerprint": "cpu__cpu__v1",
+      "entries": {
+        "[\"matmul\", [512, 256, 128], \"float32\", \"pallas\"]": {
+          "pick": [256, 128, 128],
+          "est_ms": 0.41,
+          "candidates_timed": [[[256, 128, 128], 0.41], ...],
+          "source": "measured"
+        }
+      }
+    }
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import tempfile
+import time
+from typing import Any, Callable
+
+import jax
+
+TABLE_VERSION = 1
+
+# Timing protocol defaults (env-overridable for slow CI machines).
+DEFAULT_WARMUP = int(os.environ.get("REPRO_AUTOTUNE_WARMUP", "1"))
+DEFAULT_REPS = int(os.environ.get("REPRO_AUTOTUNE_REPS", "3"))
+
+# Lazily loaded tables, keyed by file path: path -> {key_str: record}.
+_TABLES: dict[str, dict[str, dict]] = {}
+
+
+# ------------------------------------------------------------ identity ---
+
+def key_str(op: str, shapes: tuple, dtype_str: str, backend: str) -> str:
+    """Canonical JSON string for a cache key (tuples become arrays), used
+    both as the persisted-table dict key and in `autotune_report()`."""
+    return json.dumps([op, shapes, dtype_str, backend],
+                      separators=(",", ":"))
+
+
+def device_fingerprint() -> str:
+    """Identity of the device this process measures on.
+
+    `device_kind` distinguishes hardware generations (e.g. 'TPU v4' vs
+    'cpu'), the platform distinguishes execution stacks on the same host,
+    and the table version invalidates tables when the schema or the
+    candidate space changes.
+    """
+    dev = jax.devices()[0]
+    raw = f"{dev.device_kind}__{jax.default_backend()}__v{TABLE_VERSION}"
+    return "".join(c if c.isalnum() or c in "._-" else "-" for c in raw)
+
+
+def cache_dir() -> str:
+    """Persistence directory: `REPRO_AUTOTUNE_CACHE` or the XDG-ish
+    default `~/.cache/repro_autotune` (read per call, so tests and
+    deployments can redirect it without re-importing)."""
+    return os.path.expanduser(
+        os.environ.get("REPRO_AUTOTUNE_CACHE", "~/.cache/repro_autotune"))
+
+
+def table_path(fingerprint: str | None = None) -> str:
+    return os.path.join(cache_dir(),
+                        f"{fingerprint or device_fingerprint()}.json")
+
+
+# --------------------------------------------------------- persistence ---
+
+def _read_table(path: str) -> dict[str, dict]:
+    """Parse a table file; corrupted, stale-version or wrong-device files
+    read as empty (the caller then measures and rewrites them)."""
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+        if (raw.get("version") != TABLE_VERSION
+                or raw.get("fingerprint") != os.path.splitext(
+                    os.path.basename(path))[0]):
+            return {}
+        entries = raw.get("entries")
+        return dict(entries) if isinstance(entries, dict) else {}
+    except (OSError, json.JSONDecodeError, ValueError, AttributeError):
+        return {}
+
+
+def _table(path: str) -> dict[str, dict]:
+    tab = _TABLES.get(path)
+    if tab is None:
+        tab = _TABLES[path] = _read_table(path)
+    return tab
+
+
+def lookup(key: str) -> dict | None:
+    """Persisted record for a key on this device, or None."""
+    rec = _table(table_path()).get(key)
+    return dict(rec) if rec is not None else None
+
+
+def store(key: str, record: dict) -> bool:
+    """Insert a record in memory and persist the table atomically.
+
+    Re-reads the file before writing so concurrent processes tuning
+    disjoint shapes merge instead of clobbering each other; `os.replace`
+    keeps readers from ever seeing a torn file.  Persistence is never
+    fatal: on an unwritable cache dir (read-only shipped table, read-only
+    container FS) the measured pick still serves this process and False is
+    returned — only the cross-process reuse is lost.
+    """
+    path = table_path()
+    merged = _read_table(path)
+    merged.update(_table(path))
+    merged[key] = dict(record)
+    _TABLES[path] = merged
+    payload = {"version": TABLE_VERSION,
+               "fingerprint": os.path.splitext(os.path.basename(path))[0],
+               "entries": merged}
+    tmp = None
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                   prefix=".autotune-", suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, indent=1)
+        os.replace(tmp, path)
+        return True
+    except OSError:
+        if tmp is not None:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+        return False
+
+
+def reset() -> None:
+    """Drop the lazily-loaded in-memory tables (tests use this to simulate
+    a fresh process: the next lookup re-reads from disk)."""
+    _TABLES.clear()
+
+
+# -------------------------------------------------------------- timing ---
+
+def time_thunk(thunk: Callable[[], Any], *, warmup: int = DEFAULT_WARMUP,
+               reps: int = DEFAULT_REPS) -> float:
+    """Median wall-clock milliseconds of `thunk` over `reps` fenced calls.
+
+    `warmup` un-timed calls first absorb jit compilation and device
+    warm-up; every call is fenced with `jax.block_until_ready` so async
+    dispatch cannot hide execution time.
+    """
+    for _ in range(max(warmup, 0)):
+        jax.block_until_ready(thunk())
+    samples = []
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(thunk())
+        samples.append(time.perf_counter() - t0)
+    return statistics.median(samples) * 1e3

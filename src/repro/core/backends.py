@@ -6,7 +6,11 @@ system.  This module is the software form of that claim: a fixed op set
 (`OP_SET`) that every backend must implement, a `register_backend` /
 `get_backend` API so new execution targets plug in without touching
 `ComputeEngine`, and a per-process autotune cache so block-shape picks are
-made once per (op, shapes, dtype, backend) and reused across traces.
+made once per (op, shapes, dtype, backend) and reused across traces.  The
+cache resolves picks under a policy (`off | heuristic | measure`, see
+`set_autotune_policy`): "measure" times a candidate set on first sight and
+persists the winner to a per-device table (core/autotune.py,
+docs/autotune.md), so second processes on the same device measure nothing.
 
 Built-in backends:
 
@@ -36,12 +40,16 @@ tile plan resolved from the autotune cache):
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
+import os
+import warnings
 from typing import Any, Callable, Mapping
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import autotune
 from repro.core.precision import Precision
 from repro.kernels import flash_attention as flash_kernel
 from repro.kernels import ops as kernel_ops
@@ -60,13 +68,28 @@ class OpContext:
 
 @dataclasses.dataclass(frozen=True)
 class Backend:
+    """A registered execution target: op impls + optional autotune hooks.
+
+    `tile_picker(op, shapes, dtype) -> tuple` is the instant heuristic
+    pick; `tile_candidates(op, shapes, dtype) -> [tuple, ...]` enumerates
+    the design points the measured policy times, and
+    `tile_bench(op, shapes, dtype, tiles, interpret) -> thunk | None`
+    builds a zero-arg callable running one compiled call with those tiles.
+    A backend with only a picker autotunes heuristically; one with all
+    three participates in `autotune="measure"`.
+    """
     name: str
     ops: Mapping[str, Callable]
-    # Optional block-shape heuristic: (op, shapes, dtype) -> tuple.  Results
-    # are memoized in the process-wide autotune cache.
     tile_picker: Callable[[str, tuple, Any], tuple] | None = None
+    tile_candidates: Callable[[str, tuple, Any], list] | None = None
+    tile_bench: Callable[..., Callable | None] | None = None
 
     def op(self, name: str) -> Callable:
+        """The registered impl for `name`.
+
+        Raises NotImplementedError when this backend does not provide the
+        op (registration already rejected names outside OP_SET).
+        """
         try:
             return self.ops[name]
         except KeyError:
@@ -74,21 +97,39 @@ class Backend:
                 f"backend {self.name!r} does not implement op {name!r} "
                 f"(has: {sorted(self.ops)})") from None
 
-    def tiles(self, op: str, shapes: tuple, dtype) -> tuple:
+    def tiles(self, op: str, shapes: tuple, dtype, *,
+              interpret: bool = True) -> tuple:
+        """Block plan for one dispatch, resolved through the autotune
+        cache under the active policy (see `tile_plan`)."""
         if self.tile_picker is None:  # untiled backend: skip the cache
             return ()
-        return tile_plan(op, shapes, dtype, self.name, self.tile_picker)
+        return tile_plan(op, shapes, dtype, self.name, self.tile_picker,
+                         candidates=self.tile_candidates,
+                         bench=self.tile_bench, interpret=interpret)
 
 
 _REGISTRY: dict[str, Backend] = {}
 
 
 def register_backend(name: str, ops: Mapping[str, Callable], *,
-                     tile_picker=None, overwrite: bool = False) -> Backend:
+                     tile_picker=None, tile_candidates=None, tile_bench=None,
+                     overwrite: bool = False) -> Backend:
     """Register a backend implementing (a subset of) OP_SET.
 
-    `ops` maps op name -> impl following the op contract above.  Unknown op
-    names are rejected so typos fail at registration, not dispatch.
+    Args:
+      name: registry key; `make_engine(name)` selects it.
+      ops: op name -> impl following the op contract above.
+      tile_picker: optional `(op, shapes, dtype) -> (bm, bk, bn)` heuristic;
+        results are memoized in the process-wide autotune cache.
+      tile_candidates / tile_bench: optional measured-autotune hooks (see
+        `Backend` and docs/autotune.md); ignored unless the autotune policy
+        is "measure".
+      overwrite: replace an existing registration instead of raising.
+
+    Returns the registered `Backend`.
+
+    Raises ValueError on a duplicate name without `overwrite`, or on op
+    names outside OP_SET — typos fail at registration, not dispatch.
     """
     if name in _REGISTRY and not overwrite:
         raise ValueError(f"backend {name!r} already registered "
@@ -96,12 +137,17 @@ def register_backend(name: str, ops: Mapping[str, Callable], *,
     unknown = set(ops) - set(OP_SET)
     if unknown:
         raise ValueError(f"unknown ops {sorted(unknown)}; op set is {OP_SET}")
-    be = Backend(name=name, ops=dict(ops), tile_picker=tile_picker)
+    be = Backend(name=name, ops=dict(ops), tile_picker=tile_picker,
+                 tile_candidates=tile_candidates, tile_bench=tile_bench)
     _REGISTRY[name] = be
     return be
 
 
 def get_backend(name: str) -> Backend:
+    """The registered `Backend` for `name`.
+
+    Raises ValueError (naming the registered backends) when unknown.
+    """
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -110,43 +156,163 @@ def get_backend(name: str) -> Backend:
 
 
 def list_backends() -> tuple[str, ...]:
+    """Sorted names of all registered backends."""
     return tuple(sorted(_REGISTRY))
 
 
 def unregister_backend(name: str) -> None:
+    """Remove a backend registration (no-op when absent)."""
     _REGISTRY.pop(name, None)
 
 
 # ------------------------------------------------------- autotune cache ---
-# Block-shape picks are pure functions of (op, shapes, dtype, backend); the
-# heuristic walks a VMEM-budget loop, so memoize it process-wide.  Stats are
-# observable so benchmarks/tests can assert cache behaviour.
+# Block-shape picks are memoized process-wide, keyed on
+# (op, shapes, dtype, backend).  Under the default "heuristic" policy a
+# miss runs the backend's VMEM-budget picker; under "measure" a miss first
+# consults the per-device persisted table (core/autotune.py), and only when
+# that also misses times the backend's candidate set and persists the
+# winner.  Stats and per-key records are observable so benchmarks/tests can
+# assert cache behaviour and report heuristic-vs-measured picks.
+
+AUTOTUNE_POLICIES = ("off", "heuristic", "measure")
 
 _TILE_CACHE: dict[tuple, tuple] = {}
+_TILE_RECORDS: dict[tuple, dict] = {}
 _TILE_STATS = collections.Counter()
 
 
+def _policy_from_env(value: str | None) -> str:
+    """Default policy from `REPRO_AUTOTUNE`.  A typo'd value must not
+    silently degrade to heuristic behaviour (the shipped table would never
+    be consulted), so it warns loudly before falling back."""
+    if value is None or value in AUTOTUNE_POLICIES:
+        return value or "heuristic"
+    warnings.warn(f"ignoring invalid REPRO_AUTOTUNE={value!r}; "
+                  f"choose from {AUTOTUNE_POLICIES}", stacklevel=2)
+    return "heuristic"
+
+
+_POLICY = _policy_from_env(os.environ.get("REPRO_AUTOTUNE"))
+
+
+def set_autotune_policy(policy: str) -> str:
+    """Set the process-wide autotune policy; returns the previous one.
+
+      off       : call the backend picker every time, no cache, no disk.
+      heuristic : memoized picker (the default).
+      measure   : memoized; first sight of a key loads the per-device
+                  persisted pick or times the candidate set and persists
+                  the winner.
+
+    Raises ValueError for a policy outside AUTOTUNE_POLICIES.
+    """
+    global _POLICY
+    if policy not in AUTOTUNE_POLICIES:
+        raise ValueError(f"unknown autotune policy {policy!r}; "
+                         f"choose from {AUTOTUNE_POLICIES}")
+    prev, _POLICY = _POLICY, policy
+    return prev
+
+
+def get_autotune_policy() -> str:
+    """The active policy (env default: `REPRO_AUTOTUNE` or "heuristic")."""
+    return _POLICY
+
+
+@contextlib.contextmanager
+def autotune_policy(policy: str):
+    """Context manager scoping a policy change (used by
+    `Network.compile(..., autotune=...)` for the measured warmup pass)."""
+    prev = set_autotune_policy(policy)
+    try:
+        yield
+    finally:
+        set_autotune_policy(prev)
+
+
+def _measure_plan(key: tuple, picker, candidates, bench,
+                  interpret: bool) -> tuple | None:
+    """Measured resolution of a cache miss: persisted pick if the per-device
+    table has one, else time candidates and persist the winner.  Returns
+    None when the backend has nothing to measure for this op (e.g. the
+    attention path, whose tiling is not (bm, bk, bn)-shaped)."""
+    op, shapes, dtype_str, backend = key
+    ks = autotune.key_str(op, shapes, dtype_str, backend)
+    rec = autotune.lookup(ks)
+    if rec is not None and rec.get("pick"):
+        _TILE_STATS["persisted"] += 1
+        plan = tuple(rec["pick"])
+        _TILE_RECORDS[key] = dict(rec, source="persisted")
+        return plan
+    cands = [tuple(c) for c in candidates(op, shapes, dtype_str)]
+    base = tuple(picker(op, shapes, dtype_str))
+    if base and base not in cands:
+        cands.insert(0, base)
+    timed = []
+    for cand in cands:
+        thunk = bench(op, shapes, dtype_str, cand, interpret)
+        if thunk is None:
+            continue
+        timed.append((cand, autotune.time_thunk(thunk)))
+    if not timed:
+        return None
+    plan, est_ms = min(timed, key=lambda t: t[1])
+    _TILE_STATS["measured"] += 1
+    record = {"pick": list(plan), "est_ms": est_ms,
+              "candidates_timed": [[list(c), ms] for c, ms in timed],
+              "source": "measured"}
+    _TILE_RECORDS[key] = record
+    autotune.store(ks, record)
+    return plan
+
+
 def tile_plan(op: str, shapes: tuple, dtype, backend: str,
-              picker: Callable[[str, tuple, Any], tuple]) -> tuple:
-    """Memoized block-shape pick keyed on (op, shapes, dtype, backend)."""
-    key = (op, shapes, str(jnp.dtype(dtype)), backend)
+              picker: Callable[[str, tuple, Any], tuple], *,
+              candidates=None, bench=None, interpret: bool = True) -> tuple:
+    """Block-shape pick keyed on (op, shapes, dtype, backend), resolved
+    under the active autotune policy (see `set_autotune_policy`)."""
+    dtype_str = str(jnp.dtype(dtype))
+    if _POLICY == "off":
+        return tuple(picker(op, shapes, dtype_str))
+    key = (op, shapes, dtype_str, backend)
     hit = _TILE_CACHE.get(key)
     if hit is not None:
         _TILE_STATS["hits"] += 1
         return hit
     _TILE_STATS["misses"] += 1
-    plan = tuple(picker(op, shapes, dtype))
+    plan = None
+    if _POLICY == "measure" and candidates is not None and bench is not None:
+        plan = _measure_plan(key, picker, candidates, bench, interpret)
+    if plan is None:
+        plan = tuple(picker(op, shapes, dtype_str))
+        _TILE_RECORDS[key] = {"pick": list(plan), "est_ms": None,
+                              "candidates_timed": [], "source": "heuristic"}
     _TILE_CACHE[key] = plan
     return plan
 
 
 def cache_stats() -> dict[str, int]:
+    """Counters for the block-pick cache: `hits`/`misses` are lookups,
+    `measured`/`persisted` split the misses resolved by timing vs by the
+    per-device disk table, `entries` is the resident cache size."""
     return {"hits": _TILE_STATS["hits"], "misses": _TILE_STATS["misses"],
+            "measured": _TILE_STATS["measured"],
+            "persisted": _TILE_STATS["persisted"],
             "entries": len(_TILE_CACHE)}
 
 
+def autotune_report() -> dict[str, dict]:
+    """Per-key autotune records resolved by this process, keyed by the
+    canonical JSON key string: `{key: {pick, est_ms, candidates_timed,
+    source}}` with source one of heuristic|measured|persisted."""
+    return {autotune.key_str(*k): dict(rec)
+            for k, rec in _TILE_RECORDS.items()}
+
+
 def clear_tile_cache() -> None:
+    """Reset the in-process cache, records and stats (not the disk table)."""
     _TILE_CACHE.clear()
+    _TILE_RECORDS.clear()
     _TILE_STATS.clear()
 
 
@@ -232,19 +398,41 @@ def _pallas_attention(q, k, v, *, causal, sm_scale, ctx):
     return o.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
 
 
-def _pallas_tile_picker(op: str, shapes: tuple, dtype) -> tuple:
+def gemm_dims(op: str, shapes: tuple) -> tuple[int, int, int] | None:
+    """Normalize an op's cache-key shapes to the (m, k, n) GEMM problem the
+    tiled kernels actually run — conv2d maps to its im2col GEMM.  None for
+    ops without a (bm, bk, bn)-shaped tiling (attention)."""
     if op in ("matmul", "bmm"):
-        m, k, n = shapes[-3:]
-        bm, bk, bn = kernel_ops.pick_blocks(m, k, n, dtype)
-        if op == "bmm":
-            bm, bk, bn = min(bm, 128), min(bk, 256), min(bn, 128)
-        return (bm, bk, bn)
+        return tuple(shapes[-3:])
     if op == "conv2d":
         (b, h, w, c), n, size, stride, pad = shapes
         oh = (h + 2 * pad - size) // stride + 1
         ow = (w + 2 * pad - size) // stride + 1
-        return kernel_ops.pick_blocks(b * oh * ow, size * size * c, n, dtype)
-    return ()
+        return (b * oh * ow, size * size * c, n)
+    return None
+
+
+def _pallas_tile_picker(op: str, shapes: tuple, dtype) -> tuple:
+    dims = gemm_dims(op, shapes)
+    if dims is None:
+        return ()
+    return kernel_ops.default_blocks(op, *dims, dtype)
+
+
+def _pallas_tile_candidates(op: str, shapes: tuple, dtype) -> list[tuple]:
+    dims = gemm_dims(op, shapes)
+    if dims is None:
+        return []
+    return kernel_ops.candidate_blocks(op, *dims, dtype)
+
+
+def _pallas_tile_bench(op: str, shapes: tuple, dtype, tiles: tuple,
+                       interpret: bool):
+    dims = gemm_dims(op, shapes)
+    if dims is None:
+        return None
+    return kernel_ops.bench_thunk(op, *dims, dtype, tiles,
+                                  interpret=interpret)
 
 
 # ---------------------------------------------------------- xla backend ---
@@ -296,7 +484,9 @@ register_backend("pallas", {
     "bmm": _pallas_bmm,
     "conv2d": im2col_conv2d(_pallas_matmul),
     "attention": _pallas_attention,
-}, tile_picker=_pallas_tile_picker)
+}, tile_picker=_pallas_tile_picker,
+    tile_candidates=_pallas_tile_candidates,
+    tile_bench=_pallas_tile_bench)
 
 register_backend("xla", {
     "matmul": _xla_matmul,

@@ -14,6 +14,7 @@ every subsequent call a straight executable invocation.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import time
 from typing import Any, Iterable
@@ -173,20 +174,37 @@ class Network:
 
     # -------------------------------------------------------------- compile
     def compile(self, params: dict, batch_size: int = 1, *,
-                dtype=jnp.float32,
-                donate_params: bool = False) -> "CompiledNetwork":
+                dtype=jnp.float32, donate_params: bool = False,
+                autotune: str | None = None) -> "CompiledNetwork":
         """Lower the planned layer list into a single compiled artifact.
 
         One jit trace happens here (AOT lower + compile); every
         `CompiledNetwork.__call__` afterwards is a straight executable
         invocation — no retracing, no per-layer Python dispatch.
+
+        Args:
+          params: the param tree from `init` (or a checkpoint).
+          batch_size: fixed batch the artifact is compiled for.
+          dtype: fixed input dtype (validated at call time, like shape).
+          donate_params: donate param buffers to each call (see
+            `CompiledNetwork`).
+          autotune: optional autotune policy ("off" | "heuristic" |
+            "measure") scoped to this lowering; "measure" is the opt-in
+            measured warmup pass — first-seen block-pick keys are timed
+            and persisted to the per-device table (docs/autotune.md).
+            None inherits the process policy.
+
+        Returns a `CompiledNetwork`.  Raises ValueError for an unknown
+        autotune policy.
         """
         return CompiledNetwork(self, params, batch_size, dtype=dtype,
-                               donate_params=donate_params)
+                               donate_params=donate_params,
+                               autotune=autotune)
 
     def compile_cache(self, params: dict,
                       buckets: Iterable[int] = (1, 2, 4, 8), *,
-                      dtype=jnp.float32) -> "CompileCache":
+                      dtype=jnp.float32,
+                      autotune: str | None = None) -> "CompileCache":
         """Bucketed compilation cache for ragged serving traffic.
 
         Each bucket batch size lazily compiles its own `CompiledNetwork`
@@ -194,8 +212,11 @@ class Network:
         ragged batch up to the smallest bucket that fits and slices the
         real rows back out.  The serving frontend
         (`repro.serve.frontend.CNNServingEngine`) dispatches through this.
+        `autotune` is forwarded to every bucket compile (see
+        `Network.compile`).
         """
-        return CompileCache(self, params, buckets, dtype=dtype)
+        return CompileCache(self, params, buckets, dtype=dtype,
+                            autotune=autotune)
 
 
 class CompiledNetwork:
@@ -212,7 +233,8 @@ class CompiledNetwork:
     """
 
     def __init__(self, net: Network, params: dict, batch_size: int, *,
-                 dtype=jnp.float32, donate_params: bool = False):
+                 dtype=jnp.float32, donate_params: bool = False,
+                 autotune: str | None = None):
         self.net = net
         self.params = params
         self.batch_size = batch_size
@@ -227,17 +249,36 @@ class CompiledNetwork:
 
         donate = (0,) if donate_params else ()
         before = backends.dispatch_counts()
-        self._compiled = (jax.jit(fwd, donate_argnums=donate)
-                          .lower(params, self.in_spec).compile())
+        before_tuned = set(backends.autotune_report())
+        policy = (backends.autotune_policy(autotune) if autotune
+                  else contextlib.nullcontext())
+        with policy:
+            self._compiled = (jax.jit(fwd, donate_argnums=donate)
+                              .lower(params, self.in_spec).compile())
         # The single trace just happened; the counter diff IS the network's
-        # static engine-op plan (e.g. {('xla','conv2d'): n_conv_layers}).
+        # static engine-op plan (e.g. {('xla','conv2d'): n_conv_layers}),
+        # and the autotune-report diff is the block-pick keys this lowering
+        # resolved first (heuristic, measured, or served from disk).
         self.op_counts = backends.counts_since(before)
+        self.autotune_keys = tuple(
+            k for k in backends.autotune_report() if k not in before_tuned)
 
     @property
     def trace_count(self) -> int:
         return self._trace_count
 
     def __call__(self, x, params: dict | None = None):
+        """Run the compiled executable on a batch.
+
+        Args:
+          x: input exactly matching the compiled (shape, dtype) spec.
+          params: optional replacement param tree (required per call when
+            compiled with donate_params=True).
+
+        Returns the network output.  Raises ValueError when x's shape or
+        dtype differs from the compiled spec — the artifact never
+        retraces.
+        """
         if x.shape != self.in_spec.shape:
             raise ValueError(f"compiled for input {self.in_spec.shape}, "
                              f"got {x.shape}")
@@ -254,9 +295,24 @@ class CompiledNetwork:
             self(jnp.zeros(self.in_spec.shape, self.in_spec.dtype)))
         return self
 
+    def autotune_report(self) -> dict[str, dict]:
+        """Block-pick records first resolved during this artifact's
+        lowering: `{key: {pick, est_ms, candidates_timed, source}}` with
+        source one of heuristic|measured|persisted (docs/autotune.md)."""
+        full = backends.autotune_report()
+        return {k: full[k] for k in self.autotune_keys if k in full}
+
     def profile(self, x=None, reps: int = 3) -> dict:
         """Timed execution: per-call wall time plus the static engine
-        op-dispatch counts captured at compile."""
+        op-dispatch counts and the autotune records captured at compile.
+
+        Args:
+          x: input batch (defaults to zeros of the compiled spec).
+          reps: timed repetitions after one untimed warm call.
+
+        Returns `{per_call_s, reps, batch_size, trace_count, op_counts,
+        autotune}`.
+        """
         if x is None:
             x = jnp.zeros(self.in_spec.shape, self.in_spec.dtype)
         jax.block_until_ready(self(x))
@@ -268,7 +324,8 @@ class CompiledNetwork:
         return {"per_call_s": dt, "reps": reps,
                 "batch_size": self.batch_size,
                 "trace_count": self._trace_count,
-                "op_counts": dict(self.op_counts)}
+                "op_counts": dict(self.op_counts),
+                "autotune": self.autotune_report()}
 
 
 class CompileCache:
@@ -293,7 +350,7 @@ class CompileCache:
 
     def __init__(self, net: Network, params: dict,
                  buckets: Iterable[int] = (1, 2, 4, 8), *,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, autotune: str | None = None):
         bs = tuple(sorted({int(b) for b in buckets}))
         if not bs or bs[0] < 1:
             raise ValueError(f"buckets must be positive ints, got {buckets}")
@@ -301,6 +358,7 @@ class CompileCache:
         self.params = params
         self.buckets = bs
         self.dtype = jnp.dtype(dtype)
+        self.autotune = autotune
         self._compiled: dict[int, CompiledNetwork] = {}
         self.hits = 0
         self.misses = 0
@@ -316,14 +374,17 @@ class CompileCache:
         return None
 
     def get(self, bucket: int) -> CompiledNetwork:
-        """The compiled executable for a bucket (lazy compile on miss)."""
+        """The compiled executable for a bucket (lazy compile on miss).
+
+        Raises ValueError when `bucket` is not one of the cache's buckets.
+        """
         if bucket not in self.buckets:
             raise ValueError(f"{bucket} is not a bucket; have {self.buckets}")
         cn = self._compiled.get(bucket)
         if cn is None:
             self.misses += 1
             cn = self.net.compile(self.params, batch_size=bucket,
-                                  dtype=self.dtype)
+                                  dtype=self.dtype, autotune=self.autotune)
             self._compiled[bucket] = cn
         else:
             self.hits += 1
@@ -334,6 +395,10 @@ class CompileCache:
 
         x: (n, H, W, C) with the cache dtype; n >= 1.  Batches above the top
         bucket are processed in top-bucket chunks and concatenated.
+
+        Returns the (n, ...) network output for the real rows.  Raises
+        ValueError on an empty batch or a dtype differing from the cache's
+        compiled dtype.
         """
         n = x.shape[0]
         if n == 0:
@@ -365,8 +430,18 @@ class CompileCache:
             self.get(b).warmup()
         return self
 
+    def autotune_report(self) -> dict[str, dict]:
+        """Union of the block-pick records resolved by the bucket
+        compiles (see `CompiledNetwork.autotune_report`)."""
+        out: dict[str, dict] = {}
+        for cn in self._compiled.values():
+            out.update(cn.autotune_report())
+        return out
+
     def stats(self) -> dict:
         total = self._rows_real + self._rows_pad
+        tuned = self.autotune_report()
+        sources = collections.Counter(r["source"] for r in tuned.values())
         return {
             "buckets": self.buckets,
             "compiled": tuple(sorted(self._compiled)),
@@ -377,4 +452,5 @@ class CompileCache:
             "rows_real": self._rows_real,
             "rows_padded": self._rows_pad,
             "pad_waste": (self._rows_pad / total) if total else 0.0,
+            "autotune": {"keys": len(tuned), "sources": dict(sources)},
         }

@@ -41,13 +41,15 @@ class ComputeEngine:
 
     # ---------------------------------------------------------- dispatch ---
     def _resolve(self, op: str, shapes: tuple, dtype) -> backends.OpContext:
-        """Look up the backend, consult the autotune cache, count the
-        dispatch (trace-time: compiled programs pay this once)."""
+        """Look up the backend, consult the autotune cache (under the
+        active policy — a "measure" policy may time candidates here, on
+        first sight of the key), count the dispatch (trace-time: compiled
+        programs pay this once)."""
         be = backends.get_backend(self.backend)
         if self.bm and self.bk and self.bn:
             tiles = (self.bm, self.bk, self.bn)
         else:
-            tiles = be.tiles(op, shapes, dtype)
+            tiles = be.tiles(op, shapes, dtype, interpret=self.interpret)
         backends.record_dispatch(self.backend, op)
         return backends.OpContext(precision=self.precision,
                                   interpret=self.interpret, tiles=tiles)
@@ -60,7 +62,16 @@ class ComputeEngine:
                out_dtype=None):
         """act((x @ w) * scale + shift) over the last dim of x.
 
-        x: (..., K); w: (K, N); scale/shift: (N,) or None.
+        Args:
+          x: (..., K) input; leading dims are flattened for the kernel and
+            restored on the result.
+          w: (K, N) weight.
+          scale, shift: (N,) epilogue vectors or None (folded BN / bias).
+          act: activation name understood by `kernels.common.apply_act`.
+          out_dtype: result dtype; defaults to the policy compute dtype.
+
+        Returns (..., N) with fp32 accumulation regardless of out_dtype.
+        Raises NotImplementedError when the backend lacks the op.
         """
         *lead, k = x.shape
         n = w.shape[-1]
@@ -73,7 +84,11 @@ class ComputeEngine:
         return y.reshape(*lead, n)
 
     def bmm(self, x, w, *, out_dtype=None):
-        """Batched GEMM (B, M, K) @ (B, K, N), fp32 accumulate."""
+        """Batched GEMM (B, M, K) @ (B, K, N), fp32 accumulate.
+
+        Returns (B, M, N) in `out_dtype` (default: x.dtype).  Raises
+        NotImplementedError when the backend lacks the op.
+        """
         b, m, k = x.shape
         n = w.shape[-1]
         out_dtype = out_dtype or x.dtype
@@ -87,8 +102,15 @@ class ComputeEngine:
                out_dtype=None):
         """Fused conv+BN+activation as ONE engine invocation.
 
-        x: (B, H, W, Cin) NHWC; w: (kh*kw*Cin, Cout) flattened HWIO;
-        scale/shift: (Cout,) or None (folded batch-norm / bias epilogue).
+        Args:
+          x: (B, H, W, Cin) NHWC input.
+          w: (kh*kw*Cin, Cout) flattened HWIO weight.
+          scale, shift: (Cout,) or None (folded batch-norm / bias epilogue).
+          size, stride, pad: square kernel size, stride, symmetric padding.
+          act: activation name; out_dtype defaults to the compute dtype.
+
+        Returns (B, OH, OW, Cout).  Raises NotImplementedError when the
+        backend lacks the op.
         """
         out_dtype = out_dtype or self.precision.compute_dtype
         xc = x.astype(self.precision.compute_dtype)
@@ -103,10 +125,12 @@ class ComputeEngine:
         """softmax(q k^T / sqrt(D)) v, fp32 softmax statistics.
 
         q: (B, Sq, H, D); k, v: (B, Skv, H, D) (kv heads already broadcast).
-        When causal, queries are right-aligned against keys, so Sq <= Skv
-        is required (Sq > Skv would leave early query rows fully masked).
-        This is the single-device kernel-backed op; the distribution-aware
-        blockwise formulation GSPMD shards lives in models/attention.py.
+        Returns (B, Sq, H, D) in q's compute dtype.  When causal, queries
+        are right-aligned against keys, so Sq <= Skv is required
+        (ValueError otherwise — Sq > Skv would leave early query rows fully
+        masked).  This is the single-device kernel-backed op; the
+        distribution-aware blockwise formulation GSPMD shards lives in
+        models/attention.py.
         """
         if causal and q.shape[1] > k.shape[1]:
             raise ValueError(

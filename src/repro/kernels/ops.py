@@ -36,28 +36,99 @@ def pick_blocks(m: int, k: int, n: int, dtype) -> tuple[int, int, int]:
     bm = min(_round_up(m, 8), 256)
     bn = min(_round_up(n, 128), 256)
     # Grow bk while the working set stays under budget.
-    budget = 8 * 1024 * 1024
+    budget = _VMEM_BUDGET
     bk = 128
     while bk < 2048:
         nxt = bk * 2
-        ws = 2 * (bm * nxt + nxt * bn) * itemsize + 2 * bm * bn * 4
+        ws = _working_set(bm, nxt, bn, itemsize)
         if ws > budget or nxt > _round_up(k, 128):
             break
         bk = nxt
     return bm, bk, bn
 
 
-def _cached_blocks(op: str, m: int, k: int, n: int, dtype
+# Double-buffered VMEM working set target (~half of a 16 MiB/core VMEM).
+_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def _working_set(bm: int, bk: int, bn: int, itemsize: int) -> int:
+    """Bytes resident in VMEM for one grid step: double-buffered x/w tiles
+    plus the fp32 accumulator and output tile."""
+    return 2 * (bm * bk + bk * bn) * itemsize + 2 * bm * bn * 4
+
+
+def default_blocks(op: str, m: int, k: int, n: int, dtype
                    ) -> tuple[int, int, int]:
-    """Default block pick, memoized in the registry's autotune cache (same
-    picker and cache key as engine dispatch, so both paths agree).
+    """Per-op heuristic pick: `pick_blocks` with the bmm clamp (the batch
+    grid dimension multiplies the working set's live tiles, so bmm runs
+    smaller blocks)."""
+    bm, bk, bn = pick_blocks(m, k, n, dtype)
+    if op == "bmm":
+        bm, bk, bn = min(bm, 128), min(bk, 256), min(bn, 128)
+    return bm, bk, bn
+
+
+def candidate_blocks(op: str, m: int, k: int, n: int, dtype
+                     ) -> list[tuple[int, int, int]]:
+    """Candidate set for measured autotuning: the heuristic pick plus its
+    axis-wise half/double neighbors, clamped to MXU-aligned sizes (bm mult
+    of 8, bk/bn mult of 128) and filtered to the VMEM working-set budget.
+
+    Small by design (<= 7 points): measurement happens once per (op,
+    shapes, dtype, backend) key per device, ever, so the sweep only needs
+    to cover the heuristic's failure directions, not the full design space.
+    """
+    base = default_blocks(op, m, k, n, dtype)
+    itemsize = jnp.dtype(dtype).itemsize
+    bm, bk, bn = base
+    cands = [base]
+    for vm, vk, vn in ((bm // 2, bk, bn), (bm * 2, bk, bn),
+                       (bm, bk // 2, bn), (bm, bk * 2, bn),
+                       (bm, bk, bn // 2), (bm, bk, bn * 2)):
+        cand = (max(8, min(_round_up(vm, 8), 512)),
+                max(128, min(_round_up(vk, 128), 2048)),
+                max(128, min(_round_up(vn, 128), 512)))
+        if cand in cands:
+            continue
+        if _working_set(*cand, itemsize) > _VMEM_BUDGET:
+            continue
+        cands.append(cand)
+    return cands
+
+
+def bench_thunk(op: str, m: int, k: int, n: int, dtype,
+                tiles: tuple[int, int, int], *, interpret: bool = True):
+    """Zero-arg thunk running one compiled call of the op's GEMM problem
+    with pinned block shapes — the measurement unit for the autotuner
+    (core/autotune.py times it with warmup + median-of-k).
+
+    conv2d is measured as its im2col GEMM (the tiled work the pallas
+    backend actually runs); bmm uses a single-batch problem, since the
+    batch grid dimension scales all candidates equally.  Operands are
+    zeros: GEMM does identical work regardless of values.
+    """
+    bm, bk, bn = tiles
+    if op == "bmm":
+        x = jnp.zeros((1, m, k), dtype)
+        w = jnp.zeros((1, k, n), dtype)
+        return lambda: bmm(x, w, bm=bm, bk=bk, bn=bn, interpret=interpret)
+    x = jnp.zeros((m, k), dtype)
+    w = jnp.zeros((k, n), dtype)
+    return lambda: matmul(x, w, bm=bm, bk=bk, bn=bn, interpret=interpret)
+
+
+def _cached_blocks(op: str, m: int, k: int, n: int, dtype, interpret: bool
+                   ) -> tuple[int, int, int]:
+    """Default block pick, resolved through the registry's autotune cache
+    (same hooks and cache key as engine dispatch, so both paths agree and
+    the "measure" policy covers direct kernel calls too).
 
     Imported lazily: core/backends.py imports this module at load time, and
     by the time a kernel wrapper actually executes the registry is loaded.
     """
     from repro.core import backends
-    return backends.tile_plan(op, (m, k, n), dtype, "pallas",
-                              backends._pallas_tile_picker)
+    return backends.get_backend("pallas").tiles(op, (m, k, n), dtype,
+                                                interpret=interpret)
 
 
 @functools.partial(
@@ -71,7 +142,7 @@ def matmul(x, w, scale=None, shift=None, *, act: str = "linear",
     _, n = w.shape
     out_dtype = out_dtype or x.dtype
     if not (bm and bk and bn):
-        bm, bk, bn = _cached_blocks("matmul", m, k, n, x.dtype)
+        bm, bk, bn = _cached_blocks("matmul", m, k, n, x.dtype, interpret)
     mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
     xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
     wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
@@ -92,7 +163,7 @@ def bmm(x, w, *, out_dtype=None, bm: int = 0, bk: int = 0, bn: int = 0,
     _, _, n = w.shape
     out_dtype = out_dtype or x.dtype
     if not (bm and bk and bn):
-        bm, bk, bn = _cached_blocks("bmm", m, k, n, x.dtype)
+        bm, bk, bn = _cached_blocks("bmm", m, k, n, x.dtype, interpret)
     mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
     xp = jnp.pad(x, ((0, 0), (0, mp - m), (0, kp - k)))
     wp = jnp.pad(w, ((0, 0), (0, kp - k), (0, np_ - n)))

@@ -246,7 +246,8 @@ def test_untiled_backends_skip_autotune_cache():
     x, w = _rand(0, (64, 48)), _rand(1, (48, 32))
     make_engine("xla").matmul(x, w)
     make_engine("ref").matmul(x, w)
-    assert backends.cache_stats() == {"hits": 0, "misses": 0, "entries": 0}
+    assert backends.cache_stats() == {"hits": 0, "misses": 0, "measured": 0,
+                                      "persisted": 0, "entries": 0}
 
 
 def test_causal_attention_rejects_more_queries_than_keys():

@@ -1,0 +1,34 @@
+"""Docs can't rot silently: every relative link and referenced file path
+in README.md + docs/*.md must resolve (tools/check_docs_links.py; CI runs
+the script directly)."""
+import importlib.util
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _load_checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs_links", ROOT / "tools" / "check_docs_links.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_all_docs_references_resolve():
+    checker = _load_checker()
+    assert checker.check() == []
+
+
+def test_checker_flags_broken_references(tmp_path, monkeypatch):
+    """The checker itself must fail on a broken link — otherwise a silent
+    regex regression would green-light rotten docs."""
+    checker = _load_checker()
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "README.md").write_text(
+        "[gone](docs/nope.md) and `src/missing/mod.py`\n")
+    monkeypatch.setattr(checker, "ROOT", tmp_path)
+    errors = checker.check()
+    assert len(errors) == 2
+    assert any("broken link" in e for e in errors)
+    assert any("referenced path missing" in e for e in errors)

@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Docs link check: relative markdown links and referenced repo paths.
+
+Scans README.md and docs/*.md for
+
+  * relative markdown links `[text](target)` — the target (minus any
+    `#anchor`) must exist on disk, resolved against the doc's directory;
+  * backtick-quoted repo paths like `src/repro/core/backends.py` — the
+    path must exist resolved against the repo root, `src/`, or
+    `src/repro/` (docs drop those prefixes for brevity).
+
+Exit 0 when every reference resolves, 1 with a per-file report otherwise.
+Run from anywhere: paths are anchored at this file's parent repo.  CI runs
+this so the docs can't rot silently; locally it's wrapped by
+tests/test_docs_links.py.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+# [text](target) — stop the target at '#', whitespace or ')'.
+_MD_LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)[^)]*\)")
+# `some/repo/path.ext` — require a '/' and a code-ish extension so prose
+# backticks (`run(x)`, `~/.cache/...`) don't trip it.
+_CODE_PATH = re.compile(
+    r"`([A-Za-z0-9_.][\w./-]*/[\w.-]+\.(?:py|md|txt|yml|yaml|cfg|json|ini))`")
+_SCHEMES = ("http://", "https://", "mailto:")
+
+# Prefixes docs are allowed to omit when naming modules.
+_PATH_BASES = ("", "src", "src/repro")
+
+
+def _doc_files() -> list[pathlib.Path]:
+    return [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+
+def _check_file(doc: pathlib.Path) -> list[str]:
+    errors = []
+    text = doc.read_text()
+    for m in _MD_LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(_SCHEMES):
+            continue
+        if not (doc.parent / target).exists():
+            errors.append(f"{doc.relative_to(ROOT)}: broken link ({target})")
+    for m in _CODE_PATH.finditer(text):
+        target = m.group(1)
+        if target.startswith("~"):
+            continue
+        if not any((ROOT / base / target).exists() for base in _PATH_BASES):
+            errors.append(
+                f"{doc.relative_to(ROOT)}: referenced path missing "
+                f"({target})")
+    return errors
+
+
+def check() -> list[str]:
+    errors = []
+    for doc in _doc_files():
+        if not doc.exists():
+            errors.append(f"missing doc file: {doc.relative_to(ROOT)}")
+            continue
+        errors.extend(_check_file(doc))
+    return errors
+
+
+def main() -> int:
+    errors = check()
+    for e in errors:
+        print(e, file=sys.stderr)
+    n = len(_doc_files())
+    print(f"checked {n} docs: "
+          + ("OK" if not errors else f"{len(errors)} broken reference(s)"))
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
