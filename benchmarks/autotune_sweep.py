@@ -33,6 +33,15 @@ PROBLEMS = [
     ("bmm", 128, 128, 128),
 ]
 
+# Attention (bq, bk) sequence-tile problems, keyed by (q_shape, k_shape):
+# a GQA prefill, an odd-length (padded-path) prefill, and an MQA decode
+# shape — so `--check-persisted` covers attention keys too.
+ATTENTION_PROBLEMS = [
+    ((1, 256, 8, 64), (1, 256, 2, 64)),     # GQA prefill, G=4
+    ((1, 100, 14, 32), (1, 100, 2, 32)),    # odd S (padded kernel path)
+    ((2, 1, 8, 64), (2, 128, 1, 64)),       # MQA decode against a cache
+]
+
 
 def run() -> list[tuple[str, float, str]]:
     rows = []
@@ -50,6 +59,24 @@ def run() -> list[tuple[str, float, str]]:
                 kernel_ops.bench_thunk(op, m, k, n, "float32", pick))
             rows.append((
                 f"autotune_sweep/{op}_{m}x{k}x{n}", pick_ms * 1e3,
+                f"heur={'x'.join(map(str, heur))}:{heur_ms:.3f}ms "
+                f"pick={'x'.join(map(str, pick))}:{pick_ms:.3f}ms "
+                f"source={rec.get('source', '?')} "
+                f"speedup={heur_ms / pick_ms:.2f}x"))
+        for shapes in ATTENTION_PROBLEMS:
+            dims = kernel_ops.attention_dims(shapes)
+            heur = kernel_ops.default_attention_blocks(*dims, "float32")
+            pick = pallas.tiles("attention", shapes, "float32")
+            key = autotune.key_str("attention", shapes, "float32", "pallas")
+            rec = backends.autotune_report().get(key, {})
+            heur_ms = autotune.time_thunk(kernel_ops.attention_bench_thunk(
+                *dims, "float32", heur))
+            pick_ms = autotune.time_thunk(kernel_ops.attention_bench_thunk(
+                *dims, "float32", pick))
+            (_, sq, skv, h, kv, _) = dims
+            rows.append((
+                f"autotune_sweep/attention_{sq}x{skv}_h{h}kv{kv}",
+                pick_ms * 1e3,
                 f"heur={'x'.join(map(str, heur))}:{heur_ms:.3f}ms "
                 f"pick={'x'.join(map(str, pick))}:{pick_ms:.3f}ms "
                 f"source={rec.get('source', '?')} "

@@ -1,17 +1,35 @@
 """Reduced-config LM step timings on CPU: train / prefill / decode per arch
-family — the substrate-level benchmark (one row per model family)."""
+family — the substrate-level benchmark (one row per model family) — plus a
+grouped-vs-broadcast GQA prefill head-to-head.
+
+The head-to-head times the SAME attention math two ways through the
+registry `attention` op: the grouped-KV native dispatch (compact
+(B, S, KV, hd) K/V, the shipped path) against a caller-side
+``jnp.repeat`` H-broadcast (the pre-ISSUE-4 path), and reports the
+wall-clock ratio alongside the K/V bytes each variant materializes
+(`kvcache.kv_broadcast_bytes`) and, where the backend exposes it, the
+compiled executable's peak temp memory delta.
+
+    PYTHONPATH=src python benchmarks/lm_step.py            # full rows
+    PYTHONPATH=src python benchmarks/lm_step.py --smoke    # CI: head-to-head
+                                                           # + one grouped
+                                                           # prefill step
+"""
 from __future__ import annotations
 
+import argparse
+import dataclasses
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import get_arch, reduced
-from repro.core import make_engine
+from repro.core import backends, make_engine
 from repro.models import transformer as tfm
 from repro.serve import kvcache
-from repro.serve.serve_step import make_decode_step
+from repro.serve.serve_step import make_decode_step, make_prefill_step
 from repro.train import optimizer as opt
 from repro.train.train_step import make_train_step
 
@@ -25,6 +43,106 @@ def _time(fn, reps=3):
     for _ in range(reps):
         fn()
     return (time.perf_counter() - t0) / reps
+
+
+def _interleaved_median(fns: dict, reps=7) -> dict:
+    """Median seconds per call, with the variants interleaved round-robin
+    so machine-load drift hits all of them equally (head-to-heads on
+    shared CI boxes are meaningless without this)."""
+    import statistics
+    for f in fns.values():
+        f()                                    # warmup / compile
+    t = {n: [] for n in fns}
+    for _ in range(reps):
+        for n, f in fns.items():
+            t0 = time.perf_counter()
+            f()
+            t[n].append(time.perf_counter() - t0)
+    return {n: statistics.median(v) for n, v in t.items()}
+
+
+def _peak_temp_bytes(fn, *args) -> int | None:
+    """Compiled executable's temp-allocation estimate, when the backend
+    reports one (CPU/TPU expose memory_analysis; interpret-mode fallbacks
+    may not)."""
+    try:
+        ma = jax.jit(fn).lower(*args).compile().memory_analysis()
+        return int(ma.temp_size_in_bytes)
+    except Exception:
+        return None
+
+
+def gqa_prefill_headtohead(*, B=2, S=256, n_layers=2, reps=3
+                           ) -> list[tuple[str, float, str]]:
+    """Grouped vs broadcast prefill on a G=8 GQA model (8 query heads per
+    kv head — the ratio class of qwen2-style configs)."""
+    cfg = dataclasses.replace(reduced(get_arch("qwen2-0.5b")),
+                              n_heads=8, n_kv_heads=1, head_dim=32,
+                              n_layers=n_layers)
+    eng = make_engine("xla", "fp32_strict")
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+
+    def grouped(p, t):
+        return make_prefill_step(eng, cfg)(p, {"tokens": t})[0]
+
+    # The pre-ISSUE-4 formulation: same registry op, but K/V pre-broadcast
+    # to all H query heads before dispatch (G x the KV traffic).
+    from repro.models import attention as attn
+    real_forward = attn.gqa_forward
+
+    def broadcast_forward(engine, p, x, cos, sin, c, **kw):
+        kw.pop("kernel_attention", None)
+        return _gqa_forward_broadcast(engine, p, x, cos, sin, c, **kw)
+
+    def _gqa_forward_broadcast(engine, p, x, cos, sin, c, *,
+                               shard_mode="seq", n_q_chunks=8,
+                               return_kv=False):
+        from repro.models.common import rope_apply
+        Bx, Sx, _ = x.shape
+        H, KV, hd = c.n_heads, c.n_kv_heads, c.head_dim
+        q = engine.matmul(x, p["wq"], shift=p.get("bq")).reshape(
+            Bx, Sx, H, hd)
+        k = engine.matmul(x, p["wk"], shift=p.get("bk")).reshape(
+            Bx, Sx, KV, hd)
+        v = engine.matmul(x, p["wv"], shift=p.get("bv")).reshape(
+            Bx, Sx, KV, hd)
+        if cos is not None:
+            q, k = rope_apply(q, cos, sin), rope_apply(k, cos, sin)
+        kb = jnp.repeat(k, H // KV, axis=2)
+        vb = jnp.repeat(v, H // KV, axis=2)
+        y = engine.attention(q, kb, vb, causal=c.causal)
+        out = engine.matmul(y.reshape(Bx, Sx, H * hd), p["wo"])
+        return (out, {"k": k, "v": v}) if return_kv else out
+
+    def broadcast(p, t):
+        attn.gqa_forward = broadcast_forward
+        try:
+            return make_prefill_step(eng, cfg)(p, {"tokens": t})[0]
+        finally:
+            attn.gqa_forward = real_forward
+
+    g_jit, b_jit = jax.jit(grouped), jax.jit(broadcast)
+    med = _interleaved_median(
+        {"g": lambda: jax.block_until_ready(g_jit(params, toks)),
+         "b": lambda: jax.block_until_ready(b_jit(params, toks))},
+        reps=max(reps, 5))
+    t_g, t_b = med["g"], med["b"]
+    compact, broad = kvcache.kv_broadcast_bytes(cfg, B, S)
+    mem_g = _peak_temp_bytes(grouped, params, toks)
+    mem_b = _peak_temp_bytes(broadcast, params, toks)
+    mem = (f" peak_temp_delta={(mem_b - mem_g) / 1e6:.2f}MB"
+           if mem_g is not None and mem_b is not None else "")
+    rows = [
+        (f"lm_step/gqa_prefill_grouped", t_g * 1e6,
+         f"B={B} S={S} H=8 KV=1 kv_bytes={compact / 1e6:.2f}MB"),
+        (f"lm_step/gqa_prefill_broadcast", t_b * 1e6,
+         f"B={B} S={S} H=8 KV=8(broadcast) kv_bytes={broad / 1e6:.2f}MB"
+         f" grouped_speedup={t_b / t_g:.2f}x"
+         f" kv_bytes_saved={(broad - compact) / 1e6:.2f}MB{mem}"),
+    ]
+    return rows
 
 
 def run() -> list[tuple[str, float, str]]:
@@ -64,4 +182,52 @@ def run() -> list[tuple[str, float, str]]:
             t = _time(lambda: jax.block_until_ready(
                 dec(params, caches, tok, pos)[0]))
             rows.append((f"lm_step/{arch}/decode", t * 1e6, f"B={B}"))
+    rows.extend(gqa_prefill_headtohead())
     return rows
+
+
+def smoke() -> list[tuple[str, float, str]]:
+    """CI smoke: the grouped-vs-broadcast head-to-head at a small size plus
+    one grouped prefill step asserted to dispatch the registry op with
+    compact KV (no jnp.repeat in the dispatch path)."""
+    rows = gqa_prefill_headtohead(B=1, S=64, n_layers=1, reps=1)
+    cfg = reduced(get_arch("qwen2-0.5b"))
+    eng = make_engine("xla", "fp32_strict")
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jnp.zeros((2, 32), jnp.int32)
+    snap = backends.dispatch_counts()
+    logits, caches = jax.jit(make_prefill_step(eng, cfg))(
+        params, {"tokens": toks})
+    jax.block_until_ready(logits)
+    n_att = backends.counts_since(snap).get(("xla", "attention"), 0)
+    # scan-over-layers traces the layer body once: one dispatch per stack.
+    if n_att != 1:
+        raise SystemExit(f"FAIL: grouped prefill dispatched {n_att} "
+                         f"attention ops, expected 1 (scanned stack)")
+    # cache leaves are layer-stacked: (n_layers, B, S, KV, hd)
+    kv_shapes = {tuple(l.shape[-4:]) for entry in caches
+                 for l in jax.tree_util.tree_leaves(entry)}
+    want = (2, 32, cfg.n_kv_heads, cfg.head_dim)
+    if kv_shapes != {want}:
+        raise SystemExit(f"FAIL: prefill caches are not compact grouped KV: "
+                         f"{kv_shapes} != {{{want}}}")
+    rows.append(("lm_step/smoke_grouped_prefill", 0.0,
+                 f"attention_dispatches={n_att} kv_cache_shape={want}"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small grouped-vs-broadcast head-to-head + one "
+                         "grouped prefill step with compact-KV asserts "
+                         "(CI gate)")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    for row, us, derived in (smoke() if args.smoke else run()):
+        print(f"{row},{us:.1f},{derived}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

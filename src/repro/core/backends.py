@@ -34,8 +34,14 @@ tile plan resolved from the autotune cache):
   conv2d(x, w, scale, shift, *, size, stride, pad, act, out_dtype, ctx)
       NHWC x, flattened (kh*kw*Cin, Cout) w, same fused epilogue — one
       engine invocation per conv+BN+act layer.
-  attention(q, k, v, *, causal, sm_scale, ctx)         (B,S,H,D) in/out
-      softmax(q k^T / sqrt(D)) v with fp32 softmax statistics.
+  attention(q, k, v, *, causal, sm_scale, kv_len, ctx)
+      softmax(q k^T / sqrt(D)) v with fp32 softmax statistics.  Grouped-KV
+      native: q (B,Sq,H,D), k/v (B,Skv,KV,D) with KV <= H, H % KV == 0 —
+      query head h attends kv-head h // (H/KV), NO caller-side broadcast
+      (KV == H is plain MHA).  kv_len (None | scalar | (B,)) masks keys
+      at/beyond the per-batch length (decode cache extent); causal queries
+      right-align against kv_len when given, else Skv; fully-masked rows
+      return exact 0.  Output (B,Sq,H,D).
 """
 from __future__ import annotations
 
@@ -51,7 +57,6 @@ import jax.numpy as jnp
 
 from repro.core import autotune
 from repro.core.precision import Precision
-from repro.kernels import flash_attention as flash_kernel
 from repro.kernels import ops as kernel_ops
 from repro.kernels.common import apply_act, im2col
 
@@ -63,7 +68,9 @@ class OpContext:
     """Per-dispatch context handed to backend op implementations."""
     precision: Precision
     interpret: bool = True
-    tiles: tuple = ()  # (bm, bk, bn) for tiled backends, () otherwise
+    # (bm, bk, bn) for GEMM-shaped ops on tiled backends, (bq, bk)
+    # sequence tiles for attention, () otherwise.
+    tiles: tuple = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -360,16 +367,6 @@ def im2col_conv2d(matmul_impl: Callable) -> Callable:
     return conv2d
 
 
-def _attention_tiles(s: int) -> int:
-    """Largest power-of-two block <= 256 dividing s (flash kernel requires
-    the sequence to tile exactly; engine pads are not needed for the block
-    sizes the models use)."""
-    for b in (256, 128, 64, 32, 16, 8, 4, 2, 1):
-        if s % b == 0:
-            return b
-    return 1
-
-
 # ------------------------------------------------------- pallas backend ---
 
 def _pallas_matmul(x, w, scale, shift, *, act, out_dtype, ctx):
@@ -385,23 +382,18 @@ def _pallas_bmm(x, w, *, out_dtype, ctx):
                           interpret=ctx.interpret)
 
 
-def _pallas_attention(q, k, v, *, causal, sm_scale, ctx):
-    B, Sq, H, D = q.shape
-    Skv = k.shape[1]
-    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
-    kf = k.transpose(0, 2, 1, 3).reshape(B * H, Skv, D)
-    vf = v.transpose(0, 2, 1, 3).reshape(B * H, Skv, D)
-    o = flash_kernel.flash_attention(
-        qf, kf, vf, causal=causal, sm_scale=sm_scale,
-        bq=_attention_tiles(Sq), bk=_attention_tiles(Skv),
-        interpret=ctx.interpret)
-    return o.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+def _pallas_attention(q, k, v, *, causal, sm_scale, kv_len=None, ctx):
+    bq, bk = ctx.tiles if len(ctx.tiles) == 2 else (0, 0)
+    return kernel_ops.attention(q, k, v, kv_len, causal=causal,
+                                sm_scale=sm_scale, bq=bq, bk=bk,
+                                interpret=ctx.interpret)
 
 
 def gemm_dims(op: str, shapes: tuple) -> tuple[int, int, int] | None:
     """Normalize an op's cache-key shapes to the (m, k, n) GEMM problem the
     tiled kernels actually run — conv2d maps to its im2col GEMM.  None for
-    ops without a (bm, bk, bn)-shaped tiling (attention)."""
+    ops without a (bm, bk, bn)-shaped tiling (attention tiles by sequence:
+    see `kernel_ops.attention_dims`)."""
     if op in ("matmul", "bmm"):
         return tuple(shapes[-3:])
     if op == "conv2d":
@@ -413,6 +405,9 @@ def gemm_dims(op: str, shapes: tuple) -> tuple[int, int, int] | None:
 
 
 def _pallas_tile_picker(op: str, shapes: tuple, dtype) -> tuple:
+    if op == "attention":
+        return kernel_ops.default_attention_blocks(
+            *kernel_ops.attention_dims(shapes), dtype)
     dims = gemm_dims(op, shapes)
     if dims is None:
         return ()
@@ -420,6 +415,9 @@ def _pallas_tile_picker(op: str, shapes: tuple, dtype) -> tuple:
 
 
 def _pallas_tile_candidates(op: str, shapes: tuple, dtype) -> list[tuple]:
+    if op == "attention":
+        return kernel_ops.candidate_attention_blocks(
+            *kernel_ops.attention_dims(shapes), dtype)
     dims = gemm_dims(op, shapes)
     if dims is None:
         return []
@@ -428,6 +426,10 @@ def _pallas_tile_candidates(op: str, shapes: tuple, dtype) -> list[tuple]:
 
 def _pallas_tile_bench(op: str, shapes: tuple, dtype, tiles: tuple,
                        interpret: bool):
+    if op == "attention":
+        return kernel_ops.attention_bench_thunk(
+            *kernel_ops.attention_dims(shapes), dtype, tiles,
+            interpret=interpret)
     dims = gemm_dims(op, shapes)
     if dims is None:
         return None
@@ -461,22 +463,52 @@ def _xla_bmm(x, w, *, out_dtype, ctx):
     return acc.astype(out_dtype)
 
 
-def _xla_attention(q, k, v, *, causal, sm_scale, ctx):
+def _xla_attention(q, k, v, *, causal, sm_scale, kv_len=None, ctx):
+    # Grouped without broadcast: the G query heads sharing a kv-head are
+    # FOLDED into the query-sequence axis — (B, KV, G*Sq, D) against
+    # (B, KV, Skv, D) — so the contraction stays MHA-shaped (which XLA
+    # lowers well) while the KV operand is read once per group.  G == 1
+    # (MHA) reduces to the plain per-head formulation.
     B, Sq, H, D = q.shape
-    Skv = k.shape[1]
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
     if sm_scale is None:
         sm_scale = 1.0 / (D ** 0.5)
-    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
-                   k.astype(jnp.float32),
+    qf = (q.reshape(B, Sq, KV, G, D).transpose(0, 2, 3, 1, 4)
+          .reshape(B, KV, G * Sq, D).astype(jnp.float32))
+    kt = k.transpose(0, 2, 1, 3).astype(jnp.float32)   # (B, KV, Skv, D)
+    vt = v.transpose(0, 2, 1, 3).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kt,
                    precision=ctx.precision.lax_precision) * sm_scale
-    if causal:
+    # (B|1, Sq, Skv) mask; causal right-aligns against the LIVE key extent
+    # (kv_len when given, else Skv) — same contract as the flash kernel.
+    kj = jnp.arange(Skv)
+    mask = jnp.ones((1, Sq, Skv), bool)
+    if kv_len is not None:
+        # Clamp to the key buffer (same as the pallas wrapper) so every
+        # backend derives the same causal alignment from an oversized
+        # cache-extent value.
+        kvl = jnp.minimum(jnp.broadcast_to(
+            jnp.asarray(kv_len, jnp.int32).reshape(-1), (B,)), Skv)
+        mask = mask & (kj[None, None] < kvl[:, None, None])
+        if causal:
+            qi = jnp.arange(Sq)[None, :, None] + (kvl[:, None, None] - Sq)
+            mask = mask & (kj[None, None] <= qi)
+    elif causal:
         qi = jnp.arange(Sq)[:, None] + (Skv - Sq)
-        kj = jnp.arange(Skv)[None, :]
-        s = jnp.where((kj <= qi)[None, None], s, -jnp.inf)
+        mask = mask & (kj[None, :] <= qi)[None]
+    mb = mask.shape[0]
+    maskf = jnp.broadcast_to(mask[:, None], (mb, G, Sq, Skv)).reshape(
+        mb, G * Sq, Skv)
+    s = jnp.where(maskf[:, None], s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32),
+    # Fully-masked rows (kv_len == 0, or row position >= kv_len under
+    # causal) softmax to NaN; emit exact 0 like the flash kernel.
+    p = jnp.where(maskf.any(-1)[:, None, :, None], p, 0.0)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vt,
                    precision=ctx.precision.lax_precision)
-    return o.astype(q.dtype)
+    return (o.reshape(B, KV, G, Sq, D).transpose(0, 3, 1, 2, 4)
+            .reshape(B, Sq, H, D).astype(q.dtype))
 
 
 register_backend("pallas", {

@@ -46,7 +46,10 @@ class ComputeEngine:
         first sight of the key), count the dispatch (trace-time: compiled
         programs pay this once)."""
         be = backends.get_backend(self.backend)
-        if self.bm and self.bk and self.bn:
+        if self.bm and self.bk and self.bn and op != "attention":
+            # Pinned (bm, bk, bn) applies to the GEMM-shaped ops only;
+            # attention tiles by (bq, bk) sequence blocks and always
+            # resolves through the cache.
             tiles = (self.bm, self.bk, self.bn)
         else:
             tiles = be.tiles(op, shapes, dtype, interpret=self.interpret)
@@ -121,27 +124,50 @@ class ComputeEngine:
                                   stride=stride, pad=pad, act=act,
                                   out_dtype=out_dtype, ctx=ctx)
 
-    def attention(self, q, k, v, *, causal: bool = True, sm_scale=None):
-        """softmax(q k^T / sqrt(D)) v, fp32 softmax statistics.
+    def attention(self, q, k, v, *, causal: bool = True, sm_scale=None,
+                  kv_len=None):
+        """softmax(q k^T / sqrt(D)) v, fp32 softmax statistics, grouped KV.
 
-        q: (B, Sq, H, D); k, v: (B, Skv, H, D) (kv heads already broadcast).
-        Returns (B, Sq, H, D) in q's compute dtype.  When causal, queries
-        are right-aligned against keys, so Sq <= Skv is required
-        (ValueError otherwise — Sq > Skv would leave early query rows fully
-        masked).  This is the single-device kernel-backed op; the
-        distribution-aware blockwise formulation GSPMD shards lives in
-        models/attention.py.
+        Args:
+          q: (B, Sq, H, D) queries.
+          k, v: (B, Skv, KV, D) with KV <= H and H % KV == 0 — the compact
+            grouped layout: query head h attends kv-head h // (H/KV) (the
+            kv*G+g head order of the ``(B, S, KV, G, D)`` reshape) and NO
+            caller-side broadcast happens.  KV == H is plain MHA.
+          causal: queries right-align against the LIVE key extent — Skv,
+            or kv_len when given (chunked prefill into a larger cache
+            buffer keeps causality between the new tokens).  Sq <= Skv is
+            required (ValueError otherwise).
+          sm_scale: softmax scale; defaults to 1/sqrt(D).  May be traced
+            (array-valued) on every backend.
+          kv_len: None, scalar, or (B,) int — keys at positions >= kv_len
+            are masked per batch row; values above Skv clamp to Skv.
+            Decode passes its cache extent pos+1.  Fully-masked query rows
+            (kv_len == 0, or row position >= kv_len under causal) return
+            exact 0 on every backend.
+
+        Returns (B, Sq, H, D) in q's compute dtype.  Raises ValueError on
+        a non-dividing head ratio, mismatched q/k/v dtypes or shapes, or a
+        mis-shaped kv_len — at dispatch, not deep inside a kernel.  This
+        is the single-device kernel-backed op; the distribution-aware
+        blockwise formulation GSPMD shards lives in models/attention.py.
         """
+        from repro.kernels import ops as kernel_ops
+        kernel_ops.validate_attention_shapes(q, k, v)
         if causal and q.shape[1] > k.shape[1]:
             raise ValueError(
                 f"causal attention requires Sq <= Skv (right-aligned "
                 f"queries); got Sq={q.shape[1]}, Skv={k.shape[1]}")
+        kernel_ops.validate_kv_len(kv_len, q.shape[0])
+        if kv_len is not None:
+            kv_len = jnp.asarray(kv_len, jnp.int32)
         qc = q.astype(self.precision.compute_dtype)
         kc = k.astype(self.precision.compute_dtype)
         vc = v.astype(self.precision.compute_dtype)
         ctx = self._resolve("attention", (qc.shape, kc.shape), qc.dtype)
         return self._op("attention")(qc, kc, vc, causal=causal,
-                                     sm_scale=sm_scale, ctx=ctx)
+                                     sm_scale=sm_scale, kv_len=kv_len,
+                                     ctx=ctx)
 
     def einsum(self, spec: str, x, y, *, out_dtype=None,
                acc_dtype=jnp.float32):

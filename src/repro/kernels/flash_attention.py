@@ -1,14 +1,26 @@
-"""Blockwise (flash) attention kernel for prefill/train.
+"""Blockwise (flash) attention kernel for prefill/train, grouped-KV native.
 
 This is the paper's streaming idea applied to the attention hot-spot: KV
 tiles stream through VMEM while running softmax statistics (m, l) and the
 output accumulator stay resident on-chip — the S×S score matrix never exists
 in HBM, exactly like the engine's GEMM accumulator never round-trips.
 
+Grouped KV (GQA/MQA) is a *layout* property, not a compute property: with
+H query heads sharing KV kv-heads (H % KV == 0, group size G = H/KV), the
+kernel reads the SAME (bk, d) K/V tile for all G query heads of a group —
+the BlockSpec index map sends query-head h to kv-head h // G, so K/V ride
+the bus once per group instead of once per head (G× less KV bandwidth and
+zero caller-side broadcast; see docs/engine_api.md for the layout
+contract).
+
 Grid: (B*H, Sq/bq, Skv/bk), KV innermost ("arbitrary") so the (m, l, acc)
 scratch carries across KV steps for a fixed query tile.  Causal masking uses
 global indices; fully-masked KV blocks are skipped with pl.when (on TPU the
 DMA still prefetches them; a §Perf iteration notes the trimmed-grid variant).
+An optional per-batch ``kv_len`` masks keys at/beyond the given length —
+this is what lets the ops-level wrapper zero-pad Skv to a block multiple
+(padded keys are masked out exactly) and what decode uses to attend a
+cache filled only up to ``pos``.
 """
 from __future__ import annotations
 
@@ -30,9 +42,19 @@ _NEG_INF = -1e30
 _LANES = 128  # stats scratch is lane-replicated for TPU vector layout
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                  nk: int, bq: int, bk: int, sm_scale: float, causal: bool,
-                  q_offset: int):
+def _flash_kernel(*refs, nk: int, bq: int, bk: int, sm_scale: float,
+                  causal: bool, q_offset: int, q_len: int,
+                  has_kv_len: bool):
+    if has_kv_len:
+        q_ref, k_ref, v_ref, kvl_ref, o_ref, m_ref, l_ref, acc_ref = refs
+        kv_len = kvl_ref[0, 0]
+    else:
+        q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
+        kv_len = None
+    # Causal alignment: queries right-align against the LIVE key extent —
+    # kv_len when given (per-batch, dynamic), else the static q_offset.
+    if causal and kv_len is not None:
+        q_offset = kv_len - q_len
     i, j = pl.program_id(1), pl.program_id(2)
 
     @pl.when(j == 0)
@@ -42,22 +64,28 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     def _body():
-        q = q_ref[0].astype(jnp.float32)          # (bq, d)
-        k = k_ref[0].astype(jnp.float32)          # (bk, d)
-        v = v_ref[0].astype(jnp.float32)          # (bk, d)
+        q = q_ref[0, 0].astype(jnp.float32)       # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)       # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)       # (bk, d)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32,
                                 precision=jax.lax.Precision.HIGHEST)
         s = s * sm_scale                           # (bq, bk)
+        kj = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
         if causal:
             qi = q_offset + i * bq + jax.lax.broadcasted_iota(
                 jnp.int32, (bq, bk), 0)
-            kj = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
             s = jnp.where(kj <= qi, s, _NEG_INF)
+        if kv_len is not None:
+            s = jnp.where(kj < kv_len, s, _NEG_INF)
         m_prev = m_ref[...][:, :1]                 # (bq, 1)
         m_cur = jnp.max(s, axis=-1, keepdims=True)
         m_new = jnp.maximum(m_prev, m_cur)
         p = jnp.exp(s - m_new)                     # (bq, bk)
+        # A fully-masked row has m_new == _NEG_INF, where exp(s - m_new)
+        # would be 1 at every masked position; zero them so l stays 0 and
+        # _finish emits exact 0 rows (kv_len < row position, kv_len == 0).
+        p = jnp.where(s > _NEG_INF * 0.5, p, 0.0)
         alpha = jnp.exp(m_prev - m_new)            # (bq, 1)
         l_new = l_ref[...][:, :1] * alpha + jnp.sum(p, -1, keepdims=True)
         acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
@@ -67,32 +95,59 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
         l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
 
+    # Skip KV blocks that are entirely masked for this query tile: strictly
+    # above the causal diagonal, or entirely at/beyond kv_len.
+    cond = None
     if causal:
-        # Skip KV blocks strictly above the diagonal for this query tile.
-        pl.when(j * bk <= q_offset + i * bq + bq - 1)(_body)
-    else:
+        cond = j * bk <= q_offset + i * bq + bq - 1
+    if kv_len is not None:
+        live = j * bk < kv_len
+        cond = live if cond is None else jnp.logical_and(cond, live)
+    if cond is None:
         _body()
+    else:
+        pl.when(cond)(_body)
 
     @pl.when(j == nk - 1)
     def _finish():
         l = l_ref[...][:, :1]
         l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0 output
-        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, sm_scale=None,
-                    bq: int = 256, bk: int = 256, interpret: bool = True):
-    """q: (BH, Sq, D); k, v: (BH, Skv, D).  Returns (BH, Sq, D) in q.dtype.
+                    bq: int = 256, bk: int = 256, kv_len=None,
+                    q_offset: int | None = None, q_len: int = 0,
+                    interpret: bool = True):
+    """q: (B, H, Sq, D); k, v: (B, KV, Skv, D) with H % KV == 0.
 
-    Sq % bq == 0 and Skv % bk == 0 (ops wrapper pads).  When causal,
-    queries are right-aligned against keys (q_offset = Skv - Sq).
+    Returns (B, H, Sq, D) in q.dtype.  Query head h attends kv-head
+    h // (H // KV) — the same kv*G+g head order as the grouped reshape
+    ``(B, S, KV, G, D)``; H == KV is plain MHA.  Sq % bq == 0 and
+    Skv % bk == 0 (the ops wrapper pads and passes ``kv_len`` to mask the
+    key padding).  ``kv_len``: optional (B, 1) int32 — keys at positions
+    >= kv_len are masked out for that batch row (key padding, decode
+    cache extent).
+
+    Causal alignment: queries right-align against the LIVE key extent.
+    Without kv_len that is Skv (``q_offset`` overrides it statically — the
+    ops wrapper passes the *unpadded* Skv - Sq so padding does not shift
+    the diagonal); with kv_len the offset is the dynamic per-batch
+    ``kv_len - q_len`` (``q_len`` is the real, unpadded Sq — chunked
+    prefill into a larger cache buffer keeps causality between the new
+    tokens).  Fully-masked query rows (row position >= kv_len, or
+    kv_len == 0) return exact 0.
     """
-    bh, sq, d = q.shape
-    _, skv, _ = k.shape
+    b, h, sq, d = q.shape
+    _, kvh, skv, _ = k.shape
     assert sq % bq == 0 and skv % bk == 0, ((sq, skv), (bq, bk))
+    assert h % kvh == 0, (h, kvh)
+    grp = h // kvh
     if sm_scale is None:
         sm_scale = 1.0 / (d ** 0.5)
-    grid = (bh, sq // bq, skv // bk)
+    if q_offset is None:
+        q_offset = skv - sq
+    grid = (b * h, sq // bq, skv // bk)
     scratch = []
     if pltpu is not None:
         scratch = [pltpu.VMEM((bq, _LANES), jnp.float32),   # m
@@ -104,18 +159,23 @@ def flash_attention(q, k, v, *, causal: bool = True, sm_scale=None,
             dimension_semantics=("parallel", "parallel", "arbitrary"))
     kernel = functools.partial(
         _flash_kernel, nk=grid[2], bq=bq, bk=bk, sm_scale=float(sm_scale),
-        causal=causal, q_offset=skv - sq)
+        causal=causal, q_offset=q_offset, q_len=q_len if q_len else sq,
+        has_kv_len=kv_len is not None)
+    q_spec = pl.BlockSpec((1, 1, bq, d), lambda g, i, j: (g // h, g % h, i, 0))
+    kv_spec = pl.BlockSpec((1, 1, bk, d),
+                           lambda g, i, j: (g // h, (g % h) // grp, j, 0))
+    in_specs = [q_spec, kv_spec, kv_spec]
+    operands = [q, k, v]
+    if kv_len is not None:
+        in_specs.append(pl.BlockSpec((1, 1), lambda g, i, j: (g // h, 0)))
+        operands.append(kv_len.astype(jnp.int32).reshape(b, 1))
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, bq, d), lambda g, i, j: (g, i, 0)),
-            pl.BlockSpec((1, bk, d), lambda g, i, j: (g, j, 0)),
-            pl.BlockSpec((1, bk, d), lambda g, i, j: (g, j, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, bq, d), lambda g, i, j: (g, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        in_specs=in_specs,
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
         scratch_shapes=scratch,
         interpret=interpret,
         **({"compiler_params": compiler_params} if compiler_params else {}),
-    )(q, k, v)
+    )(*operands)

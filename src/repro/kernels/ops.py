@@ -5,7 +5,9 @@ These handle the "any shape of matrices" property the paper advertises
 block multiples, the kernel runs on the padded problem, and the result is
 sliced back.  Zero padding is exact for GEMM (0-rows/cols contribute 0), and
 the epilogue is applied inside the kernel on padded columns whose outputs are
-discarded by the slice.
+discarded by the slice.  For attention, key padding is masked exactly via
+the kernel's ``kv_len`` operand (zero keys would NOT be softmax-neutral)
+and padded query rows are sliced off.
 """
 from __future__ import annotations
 
@@ -14,6 +16,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import flash_attention as flash_kernel
 from repro.kernels import gemm as gemm_kernel
 
 
@@ -115,6 +118,195 @@ def bench_thunk(op: str, m: int, k: int, n: int, dtype,
     x = jnp.zeros((m, k), dtype)
     w = jnp.zeros((k, n), dtype)
     return lambda: matmul(x, w, bm=bm, bk=bk, bn=bn, interpret=interpret)
+
+
+# ------------------------------------------------- attention (bq, bk) ---
+# The attention op tiles by SEQUENCE, not (bm, bk, bn): (bq, bk) are the
+# query/key tile lengths the flash kernel streams through VMEM.  The same
+# autotune machinery (key, candidate sweep, bench thunk, persisted table)
+# covers them — only the dims and the working-set formula differ.
+
+def attention_dims(shapes: tuple) -> tuple[int, int, int, int, int, int]:
+    """Normalize the attention cache-key shapes ``(q_shape, k_shape)`` —
+    q: (B, Sq, H, D), k: (B, Skv, KV, D) — to (b, sq, skv, h, kv, d)."""
+    (b, sq, h, d), (_, skv, kv, _) = shapes
+    return b, sq, skv, h, kv, d
+
+
+def _attention_working_set(bq: int, bk: int, d: int, itemsize: int) -> int:
+    """Bytes resident in VMEM for one attention grid step, with the
+    GROUPED KV footprint: all G query heads of a group read the same
+    (bk, d) K/V tile, so exactly one double-buffered K and V tile is live
+    regardless of the group size.  Adds the fp32 (bq, bk) score tile, the
+    lane-replicated (m, l) statistics, and the fp32 accumulator."""
+    q_out = 2 * 2 * bq * d * itemsize          # double-buffered q + out tile
+    kv = 2 * 2 * bk * d * itemsize             # double-buffered k and v
+    scores = bq * bk * 4
+    stats = 2 * bq * 128 * 4 + bq * d * 4      # m, l (lane-replicated) + acc
+    return q_out + kv + scores + stats
+
+
+def default_attention_blocks(b: int, sq: int, skv: int, h: int, kv: int,
+                             d: int, dtype) -> tuple[int, int]:
+    """Heuristic (bq, bk) pick: MXU-aligned (bq multiple of 8 sublanes,
+    bk multiple of 128 lanes), clamped to the padded problem so short
+    sequences never pad past one tile, shrunk while the grouped-KV working
+    set (`_attention_working_set`) exceeds the VMEM budget."""
+    itemsize = jnp.dtype(dtype).itemsize
+    bq = min(_round_up(sq, 8), 256)
+    bk = min(_round_up(skv, 128), 512)
+    while bk > 128 and _attention_working_set(bq, bk, d,
+                                              itemsize) > _VMEM_BUDGET:
+        bk //= 2
+    while bq > 8 and _attention_working_set(bq, bk, d,
+                                            itemsize) > _VMEM_BUDGET:
+        bq = _round_up(bq // 2, 8)
+    return bq, bk
+
+
+def candidate_attention_blocks(b: int, sq: int, skv: int, h: int, kv: int,
+                               d: int, dtype) -> list[tuple[int, int]]:
+    """Candidate (bq, bk) set for measured attention autotuning: the
+    heuristic pick plus its axis-wise half/double neighbors, MXU-aligned
+    (bq mult of 8, bk mult of 128), capped at the padded sequence extents
+    (a tile longer than the padded sequence only adds padding), and
+    filtered to the grouped-KV VMEM working-set budget.  Small by design,
+    like `candidate_blocks`: measurement happens once per key per device.
+    """
+    itemsize = jnp.dtype(dtype).itemsize
+    bq, bk = base = default_attention_blocks(b, sq, skv, h, kv, d, dtype)
+    bq_cap = min(512, _round_up(sq, 8))
+    bk_cap = min(2048, _round_up(skv, 128))
+    cands = [base]
+    for vq, vk in ((bq // 2, bk), (bq * 2, bk), (bq, bk // 2), (bq, bk * 2)):
+        cand = (max(8, min(_round_up(vq, 8), bq_cap)),
+                max(128, min(_round_up(vk, 128), bk_cap)))
+        if cand in cands:
+            continue
+        if _attention_working_set(*cand, d, itemsize) > _VMEM_BUDGET:
+            continue
+        cands.append(cand)
+    return cands
+
+
+def attention_bench_thunk(b: int, sq: int, skv: int, h: int, kv: int,
+                          d: int, dtype, tiles: tuple[int, int], *,
+                          interpret: bool = True):
+    """Zero-arg thunk running one compiled grouped-attention call with
+    pinned (bq, bk) — the attention measurement unit for the autotuner.
+    Benched causal (the prefill hot path); operands are zeros, which is
+    fair here because masking and the softmax do identical work per tile
+    regardless of values."""
+    bq, bk = tiles
+    q = jnp.zeros((b, sq, h, d), dtype)
+    k = jnp.zeros((b, skv, kv, d), dtype)
+    v = jnp.zeros((b, skv, kv, d), dtype)
+    return lambda: attention(q, k, v, causal=True, bq=bq, bk=bk,
+                             interpret=interpret)
+
+
+def validate_attention_shapes(q, k, v) -> None:
+    """Grouped-layout contract checks shared by `ComputeEngine.attention`
+    and the direct `attention` wrapper: q (B, Sq, H, D), k/v (B, Skv, KV, D)
+    with KV <= H, H % KV == 0, matching dtypes.  Raises ValueError with the
+    offending shapes/dtypes instead of failing deep inside a kernel."""
+    if q.ndim != 4 or k.ndim != 4:
+        raise ValueError(f"attention expects 4-D (B, S, heads, head_dim) "
+                         f"operands; got q {q.shape}, k {k.shape}")
+    if k.shape != v.shape:
+        raise ValueError(f"k/v shapes differ: {k.shape} vs {v.shape}")
+    b, _, h, d = q.shape
+    kb, _, kvh, kd = k.shape
+    if kb != b or kd != d:
+        raise ValueError(f"q {q.shape} and k {k.shape} disagree on "
+                         "batch or head_dim")
+    if kvh == 0 or kvh > h or h % kvh != 0:
+        raise ValueError(
+            f"grouped attention requires KV heads to evenly divide query "
+            f"heads (KV <= H, H % KV == 0); got H={h}, KV={kvh}")
+    if q.dtype != k.dtype or q.dtype != v.dtype:
+        raise ValueError(f"q/k/v dtype mismatch: q={q.dtype}, k={k.dtype}, "
+                         f"v={v.dtype}")
+
+
+def validate_kv_len(kv_len, b: int) -> None:
+    """Shape check for a kv_len argument: None, a python int, a scalar
+    array, or a (B,) array (per-slot decode positions).  Raises ValueError
+    on any other shape — shared by `ComputeEngine.attention` and the
+    direct `attention` wrapper so the two entry points cannot drift."""
+    if kv_len is None:
+        return
+    kvl = jnp.asarray(kv_len)
+    if kvl.ndim > 1 or (kvl.ndim == 1 and kvl.shape[0] != b):
+        raise ValueError(f"kv_len must be a scalar or ({b},) vector; got "
+                         f"shape {kvl.shape}")
+
+
+def normalize_kv_len(kv_len, b: int, skv: int):
+    """Canonicalize a kv_len argument to (B, 1) int32 clamped to Skv, or
+    None (see `validate_kv_len` for the accepted forms)."""
+    if kv_len is None:
+        return None
+    validate_kv_len(kv_len, b)
+    kvl = jnp.asarray(kv_len, jnp.int32)
+    return jnp.minimum(jnp.broadcast_to(kvl.reshape(-1), (b,)),
+                       skv).reshape(b, 1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def attention(q, k, v, kv_len=None, sm_scale=None, *, causal: bool = True,
+              bq: int = 0, bk: int = 0, interpret: bool = True):
+    """Grouped flash attention on the engine, arbitrary sequence lengths.
+
+    q: (B, Sq, H, D); k, v: (B, Skv, KV, D) with KV <= H, H % KV == 0 —
+    query head h attends kv-head h // (H // KV), with NO caller-side
+    broadcast.  Sequences are zero-padded up to (bq, bk) multiples, the
+    kernel masks padded keys via ``kv_len``, and padded query rows are
+    sliced off.  ``kv_len`` (scalar or (B,)) masks keys at/beyond the given
+    per-batch length, clamped to Skv — decode passes its cache extent
+    pos+1.  ``sm_scale`` may be traced (a learned temperature).  Causal
+    queries right-align against the LIVE key extent: the real (unpadded)
+    Skv, or ``kv_len`` when given (chunked prefill into a larger cache
+    buffer).  Fully-masked query rows return exact 0.
+    """
+    validate_attention_shapes(q, k, v)
+    b, sq, h, d = q.shape
+    _, skv, kvh, _ = k.shape
+    if not (bq and bk):
+        bq, bk = _cached_attention_blocks((q.shape, k.shape), q.dtype,
+                                          interpret)
+    sqp, skvp = _round_up(sq, bq), _round_up(skv, bk)
+    kvl = normalize_kv_len(kv_len, b, skv)
+    if kvl is None and skvp != skv:
+        kvl = jnp.full((b, 1), skv, jnp.int32)   # mask the key padding
+    qt = q.transpose(0, 2, 1, 3)                 # (B, H, Sq, D)
+    kt = k.transpose(0, 2, 1, 3)                 # (B, KV, Skv, D)
+    vt = v.transpose(0, 2, 1, 3)
+    # sm_scale is a traced value (a learned temperature works on every
+    # backend): fold it into q in fp32 and run the kernel unscaled.
+    scale = (jnp.float32(1.0 / (d ** 0.5)) if sm_scale is None
+             else jnp.asarray(sm_scale, jnp.float32))
+    qt = (qt.astype(jnp.float32) * scale).astype(q.dtype)
+    if sqp != sq:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, sqp - sq), (0, 0)))
+    if skvp != skv:
+        pad = ((0, 0), (0, 0), (0, skvp - skv), (0, 0))
+        kt, vt = jnp.pad(kt, pad), jnp.pad(vt, pad)
+    o = flash_kernel.flash_attention(
+        qt, kt, vt, causal=causal, sm_scale=1.0, bq=bq, bk=bk,
+        kv_len=kvl, q_offset=skv - sq, q_len=sq, interpret=interpret)
+    return o[:, :, :sq].transpose(0, 2, 1, 3)
+
+
+def _cached_attention_blocks(shapes: tuple, dtype, interpret: bool
+                             ) -> tuple[int, int]:
+    """Default (bq, bk) pick for direct `attention` calls, resolved through
+    the registry's autotune cache under the same ("attention",
+    (q_shape, k_shape), dtype, "pallas") key engine dispatch uses."""
+    from repro.core import backends
+    return backends.get_backend("pallas").tiles("attention", shapes, dtype,
+                                                interpret=interpret)
 
 
 def _cached_blocks(op: str, m: int, k: int, n: int, dtype, interpret: bool

@@ -39,24 +39,45 @@ def bmm_ref(x, w, *, out_dtype=None):
     return acc.astype(out_dtype)
 
 
-def flash_attention_ref(q, k, v, *, causal: bool = True, sm_scale=None):
-    """Oracle for the blockwise attention kernel.
+def flash_attention_ref(q, k, v, *, causal: bool = True, sm_scale=None,
+                        kv_len=None):
+    """Oracle for the grouped blockwise attention kernel.
 
-    q: (B, Sq, H, D); k, v: (B, Skv, H, D)  (kv heads already broadcast).
+    q: (B, Sq, H, D); k, v: (B, Skv, KV, D) with KV <= H, H % KV == 0 —
+    query head h = kv*G + g attends kv-head h // G (G = H // KV); KV == H
+    is plain MHA.  The grouped einsum reads the shared kv-head directly (no
+    broadcast materialization, even in the oracle).  ``kv_len``: optional
+    scalar or (B,) — keys at positions >= kv_len are masked per batch row;
+    causal queries right-align against kv_len when given, else Skv;
+    fully-masked rows return exact 0.
     Returns (B, Sq, H, D) in q.dtype; softmax in fp32.
     """
     B, Sq, H, D = q.shape
-    Skv = k.shape[1]
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
     if sm_scale is None:
         sm_scale = 1.0 / (D ** 0.5)
-    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
-                        k.astype(jnp.float32),
+    qg = q.reshape(B, Sq, KV, G, D).astype(jnp.float32)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32),
                         precision=jax.lax.Precision.HIGHEST) * sm_scale
-    if causal:
+    # (1|B, Sq, Skv) mask; causal right-aligns against the LIVE key extent
+    # (kv_len when given, else Skv).  Fully-masked rows return exact 0.
+    kj = jnp.arange(Skv)
+    mask = jnp.ones((1, Sq, Skv), bool)
+    if kv_len is not None:
+        # Clamped to Skv, matching the kernel wrapper's normalize_kv_len.
+        kvl = jnp.minimum(jnp.broadcast_to(
+            jnp.asarray(kv_len, jnp.int32).reshape(-1), (B,)), Skv)
+        mask = mask & (kj[None, None] < kvl[:, None, None])
+        if causal:
+            qi = jnp.arange(Sq)[None, :, None] + (kvl[:, None, None] - Sq)
+            mask = mask & (kj[None, None] <= qi)
+    elif causal:
         qi = jnp.arange(Sq)[:, None] + (Skv - Sq)
-        kj = jnp.arange(Skv)[None, :]
-        logits = jnp.where((kj <= qi)[None, None], logits, -jnp.inf)
+        mask = mask & (kj[None, :] <= qi)[None]
+    logits = jnp.where(mask[:, None, None], logits, -jnp.inf)
     p = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32),
+    p = jnp.where(mask.any(-1)[:, None, None, :, None], p, 0.0)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32),
                      precision=jax.lax.Precision.HIGHEST)
-    return out.astype(q.dtype)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)

@@ -6,9 +6,12 @@ in static chunks and KV streams through an online-softmax scan — the same
 as the paper's GEMM engine (kernels/flash_attention.py is the Pallas TPU
 version of exactly this loop; this file is the distribution-aware jnp
 formulation that GSPMD can shard, used for lowering at 512 devices).
-Off-mesh (single device), GQA prefill routes through the registry
-`attention` op instead — the kernel-backed path — and the blockwise
-formulation engages only when a mesh is installed.
+Off-mesh (single device), GQA prefill AND decode route through the
+registry `attention` op instead — the kernel-backed path, grouped-KV
+native: the compact (B, S, KV, hd) K/V is the op operand and the kernel
+reads the shared kv-head per query-head group, so no H-broadcast is ever
+materialized.  The blockwise formulation engages only when a mesh is
+installed.
 
 Sharding modes (chosen per arch by sharding/policy.py):
   heads : KV-head-parallel — zero attention comm, used when n_kv_heads
@@ -151,11 +154,11 @@ def gqa_forward(engine: ComputeEngine, p, x, cos, sin, cfg, *,
         k = rope_apply(k, cos, sin)
     if kernel_attention and not hints.mesh_active():
         # Single-device prefill: the kernel-backed registry `attention` op
-        # (flash kernel under the pallas backend).  KV heads broadcast to H
-        # in the same kv*G+g order the grouped reshape below uses.
-        kb = jnp.repeat(k, H // KV, axis=2)
-        vb = jnp.repeat(v, H // KV, axis=2)
-        y = engine.attention(q, kb, vb, causal=cfg.causal)
+        # (flash kernel under the pallas backend), grouped-KV native — the
+        # compact (B, S, KV, hd) K/V go straight to the op, which reads the
+        # shared kv-head per query-head group (same kv*G+g head order as
+        # the grouped reshape below).  No H-broadcast anywhere.
+        y = engine.attention(q, k, v, causal=cfg.causal)
     else:
         # Mesh installed: the distribution-aware blockwise formulation that
         # GSPMD shards (heads- or sequence-parallel per shard_mode).
@@ -197,6 +200,11 @@ def gqa_decode(engine: ComputeEngine, p, x, cache, pos, cos, sin, cfg):
     x: (B, 1, D); cache: {"k","v"}: (B, S_max, KV, hd) with S_max sharded
     over 'model'; pos: scalar int, or (B,) per-slot positions.
     Returns (y, cache').
+
+    Off-mesh, attention dispatches the grouped registry `attention` op
+    (compact KV operand, ``kv_len = pos + 1`` masks unwritten cache rows).
+    Under a mesh the grouped-einsum flash-decoding formulation is kept —
+    GSPMD shards its reductions over the sequence axis.
     """
     B, _, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -211,6 +219,12 @@ def gqa_decode(engine: ComputeEngine, p, x, cache, pos, cos, sin, cfg):
     cv = cache_write(cache["v"], v, pos)
     ck = hints.shard(ck, "dp", "model", None, None)
     cv = hints.shard(cv, "dp", "model", None, None)
+    if not hints.mesh_active():
+        # Single-device decode: grouped registry op over the compact cache.
+        y = engine.attention(q.astype(ck.dtype), ck, cv, causal=False,
+                             kv_len=pos + 1)
+        y = y.reshape(B, 1, H * hd).astype(x.dtype)
+        return engine.matmul(y, p["wo"]), {"k": ck, "v": cv}
     qg = q.reshape(B, 1, KV, H // KV, hd)
     # Flash-decoding under GSPMD: S_max is sharded; max/sum lower to partial
     # reductions + all-reduce, the weighted sum to partial matmul+all-reduce.

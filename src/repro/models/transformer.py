@@ -330,10 +330,14 @@ def forward_hidden(engine: ComputeEngine, cfg, params, *, tokens=None,
 # ------------------------------------------------------ prefill / decode ---
 
 def forward_prefill(engine: ComputeEngine, cfg, params, *, tokens=None,
-                    patch_embeds=None, frames=None, n_q_chunks: int = 8):
+                    patch_embeds=None, frames=None, n_q_chunks: int = 8,
+                    kernel_attention: bool = True):
     """Full-sequence forward that also collects per-layer caches.
 
-    Returns (hidden (B, S, D), caches: list aligned with stack_program).
+    Off-mesh with ``kernel_attention`` (the default), GQA attention
+    dispatches the grouped registry `attention` op — compact (B, S, KV, hd)
+    K/V, no H-broadcast.  Returns (hidden (B, S, D), caches: list aligned
+    with stack_program).
     """
     h = _embed_inputs(engine, cfg, params, tokens, patch_embeds, frames)
     S = h.shape[1]
@@ -365,7 +369,8 @@ def forward_prefill(engine: ComputeEngine, cfg, params, *, tokens=None,
                     engine, sp["attn"],
                     norm_apply(cfg.norm, sp["norm1"], x, cfg.norm_eps),
                     cos, sin, cfg, shard_mode=shard_mode,
-                    n_q_chunks=n_q_chunks, return_kv=True)
+                    n_q_chunks=n_q_chunks, return_kv=True,
+                    kernel_attention=kernel_attention)
                 x = x + a
                 m = mlp_forward(engine, sp["mlp"],
                                 norm_apply(cfg.norm, sp["norm2"], x,
@@ -393,7 +398,8 @@ def forward_prefill(engine: ComputeEngine, cfg, params, *, tokens=None,
                 a, entry = attn.gqa_forward(engine, lp["attn"], x1, cos, sin,
                                             cfg, shard_mode=shard_mode,
                                             n_q_chunks=n_q_chunks,
-                                            return_kv=True)
+                                            return_kv=True,
+                                            kernel_attention=kernel_attention)
             hh = hh + a
             x2 = norm_apply(cfg.norm, lp["norm2"], hh, cfg.norm_eps)
             if kind in ("mla_moe", "gqa_moe"):

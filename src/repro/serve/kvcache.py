@@ -1,6 +1,10 @@
 """KV-cache construction, specs and shardings.
 
 Layout decisions (DESIGN.md §5):
+  * attention caches store the COMPACT grouped layout (B, S, KV, hd) — the
+    registry `attention` op's native KV layout, consumed directly by
+    single-device prefill/decode with no H-broadcast (`kv_broadcast_bytes`
+    quantifies the G× saving);
   * attention caches store the sequence dim SHARDED over 'model'
     (long_500k additionally over 'data' when batch=1) — decode softmax over
     the sharded axis lowers to flash-decoding under GSPMD;
@@ -106,3 +110,25 @@ def cache_bytes(cfg, B: int, S_max: int, dtype=jnp.float32) -> int:
     return sum(math.prod(l.shape) * np.dtype(l.dtype).itemsize
                for l in jax.tree_util.tree_leaves(
                    cache_struct(cfg, B, S_max, dtype)))
+
+
+def kv_broadcast_bytes(cfg, B: int, S: int, dtype=jnp.float32
+                       ) -> tuple[int, int]:
+    """(compact, broadcast) bytes of the attention K/V tensors for a
+    prefill of S tokens.
+
+    ``compact`` is what the grouped attention path materializes — the
+    (B, S, KV, hd) layout the caches store and the registry `attention` op
+    consumes directly.  ``broadcast`` is the cost of pre-expanding K/V to
+    all H query heads (the old ``jnp.repeat`` path): G = H/KV times more,
+    per layer, per prefill.  Zero attention layers (pure SSM) gives (0, 0).
+    """
+    import numpy as np
+    compact = sum(
+        math.prod(l.shape) * np.dtype(l.dtype).itemsize
+        for path, l in jax.tree_util.tree_flatten_with_path(
+            cache_struct(cfg, B, S, dtype))[0]
+        if str(getattr(path[-1], "key", path[-1])) in ("k", "v"))
+    if not compact:
+        return 0, 0
+    return compact, compact * (cfg.n_heads // cfg.n_kv_heads)

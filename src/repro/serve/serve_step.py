@@ -14,12 +14,20 @@ from repro.models import transformer as tfm
 from repro.models.common import lm_head_logits
 
 
-def make_prefill_step(engine: ComputeEngine, cfg, *, n_q_chunks: int = 8):
+def make_prefill_step(engine: ComputeEngine, cfg, *, n_q_chunks: int = 8,
+                      kernel_attention: bool = True):
+    """Prefill through the grouped attention path: off-mesh, GQA layers
+    dispatch the registry `attention` op with the compact (B, S, KV, hd)
+    K/V — the same layout the caches (serve/kvcache.py) store, so no
+    H-broadcast exists anywhere between projection and cache.
+    ``kernel_attention=False`` forces the blockwise jnp formulation (the
+    differentiable path; prefill itself never needs it)."""
     def prefill_step(params, inputs):
         h, caches = tfm.forward_prefill(
             engine, cfg, params, tokens=inputs.get("tokens"),
             patch_embeds=inputs.get("patch_embeds"),
-            frames=inputs.get("frames"), n_q_chunks=n_q_chunks)
+            frames=inputs.get("frames"), n_q_chunks=n_q_chunks,
+            kernel_attention=kernel_attention)
         w = tfm.head_weight(params, cfg)
         logits = lm_head_logits(engine, h[:, -1:, :], w,
                                 vocab_real=cfg.vocab_size)
@@ -27,14 +35,15 @@ def make_prefill_step(engine: ComputeEngine, cfg, *, n_q_chunks: int = 8):
     return prefill_step
 
 
-def make_forward_step(engine: ComputeEngine, cfg, *, n_q_chunks: int = 8):
+def make_forward_step(engine: ComputeEngine, cfg, *, n_q_chunks: int = 8,
+                      kernel_attention: bool = True):
     """Encoder-only 'prefill': full-sequence logits, no cache."""
     def forward_step(params, inputs):
         h, _ = tfm.forward_hidden(
             engine, cfg, params, tokens=inputs.get("tokens"),
             patch_embeds=inputs.get("patch_embeds"),
             frames=inputs.get("frames"), remat=False,
-            n_q_chunks=n_q_chunks)
+            n_q_chunks=n_q_chunks, kernel_attention=kernel_attention)
         w = tfm.head_weight(params, cfg)
         logits = lm_head_logits(engine, h[:, -1:, :], w,
                                 vocab_real=cfg.vocab_size)

@@ -19,9 +19,9 @@ def _ref_bmm(x, w, *, out_dtype, ctx):
     return ref.bmm_ref(x, w, out_dtype=out_dtype)
 
 
-def _ref_attention(q, k, v, *, causal, sm_scale, ctx):
+def _ref_attention(q, k, v, *, causal, sm_scale, kv_len=None, ctx):
     return ref.flash_attention_ref(q, k, v, causal=causal,
-                                   sm_scale=sm_scale)
+                                   sm_scale=sm_scale, kv_len=kv_len)
 
 
 if "ref" not in backends.list_backends():

@@ -1,0 +1,362 @@
+"""Cross-backend grouped-attention conformance suite.
+
+The registry `attention` op is grouped-KV native: q (B, Sq, H, D) with
+compact k/v (B, Skv, KV, D), KV <= H, H % KV == 0 — no caller-side
+broadcast.  This suite pins that contract across all three backends
+(ref / xla / pallas):
+
+  * parity over the (H, KV) ratios actually shipped in repro/configs/ —
+    MHA 16/16 (hubert-xlarge, zamba2 shared block), GQA 14/2 (qwen2-0.5b),
+    MQA-like 8/1 — causal and non-causal, odd sequence lengths (the padded
+    kernel path), fp32/bf16 tolerance tiers;
+  * kv_len masking (the decode cache-extent path), scalar and per-batch;
+  * grouped dispatch == manual H-broadcast (the layout is a pure
+    memory-traffic optimization, bit-for-bit in the math);
+  * clear ValueErrors at dispatch for bad head ratios / dtype mismatches;
+  * a trace-level regression: the prefill jaxpr contains NO H-broadcast of
+    K/V — the KV operand stays (B, S, KV, hd) end-to-end, so the old
+    ``jnp.repeat`` can never silently return.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch, reduced
+from repro.core import backends, make_engine, register_backend
+from repro.kernels import ref
+from repro.models import transformer as tfm
+from repro.serve.serve_step import make_prefill_step
+
+# (H, KV) ratios shipped in repro/configs/: MHA, qwen2-0.5b GQA, MQA-like.
+HEAD_RATIOS = [(16, 16), (14, 2), (8, 1)]
+BACKENDS = ("pallas", "xla", "ref")
+TOL = {jnp.float32: 2e-4, jnp.bfloat16: 2e-2}
+
+
+def _mk(seed, b, sq, skv, h, kv, d, dtype=jnp.float32):
+    kq, kk, kv_ = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(kq, (b, sq, h, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(kk, (b, skv, kv, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(kv_, (b, skv, kv, d), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+def _assert_close(got, want, dtype):
+    tol = TOL[dtype]
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# ------------------------------------------------------------- parity ---
+
+@pytest.mark.parametrize("h,kv", HEAD_RATIOS)
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("backend", ("pallas", "xla"))
+def test_grouped_parity_odd_seq(h, kv, causal, backend):
+    """Odd S=33 exercises the padded kernel path (bq pads 33->40, bk pads
+    33->128 with kv_len masking the key padding)."""
+    q, k, v = _mk(h * 31 + kv, 1, 33, 33, h, kv, 16)
+    got = make_engine(backend).attention(q, k, v, causal=causal)
+    want = make_engine("ref").attention(q, k, v, causal=causal)
+    _assert_close(got, want, jnp.float32)
+
+
+@pytest.mark.parametrize("h,kv", HEAD_RATIOS)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("backend", ("pallas", "xla"))
+def test_grouped_parity_dtype_tiers(h, kv, dtype, backend):
+    q, k, v = _mk(h + kv, 1, 64, 64, h, kv, 32, dtype)
+    eng = make_engine(backend)
+    got = eng.attention(q.astype(dtype), k.astype(dtype), v.astype(dtype),
+                        causal=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    _assert_close(got, want, dtype)
+
+
+@pytest.mark.parametrize("backend", ("pallas", "xla"))
+def test_right_aligned_cross_lengths(backend):
+    """Causal with Sq < Skv (prefill continuation): queries right-aligned
+    against the real key length, both odd."""
+    q, k, v = _mk(5, 2, 17, 33, 8, 2, 16)
+    got = make_engine(backend).attention(q, k, v, causal=True)
+    want = make_engine("ref").attention(q, k, v, causal=True)
+    _assert_close(got, want, jnp.float32)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_kv_len_parity_decode_shape(backend):
+    """Sq=1 against a long KV with per-batch kv_len — exactly the decode
+    dispatch (kv_len = pos + 1 masks unwritten cache rows)."""
+    q, k, v = _mk(9, 2, 1, 96, 8, 2, 16)
+    kvl = jnp.array([5, 64], jnp.int32)
+    eng = make_engine(backend)
+    got = eng.attention(q, k, v, causal=False, kv_len=kvl)
+    want = ref.flash_attention_ref(q, k, v, causal=False, kv_len=kvl)
+    _assert_close(got, want, jnp.float32)
+    # scalar kv_len == per-batch vector of the same value
+    got_s = eng.attention(q, k, v, causal=False, kv_len=jnp.int32(7))
+    want_s = ref.flash_attention_ref(q, k, v, causal=False, kv_len=7)
+    _assert_close(got_s, want_s, jnp.float32)
+    # and == plain attention over the 7-key prefix
+    want_p = ref.flash_attention_ref(q, k[:, :7], v[:, :7], causal=False)
+    _assert_close(got_s, want_p, jnp.float32)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_grouped_equals_manual_broadcast(backend):
+    """The grouped layout is a pure memory-traffic optimization: dispatching
+    compact (B, S, KV, hd) K/V equals dispatching the H-broadcast in the
+    kv*G+g head order."""
+    h, kv = 12, 3
+    q, k, v = _mk(2, 2, 32, 32, h, kv, 16)
+    eng = make_engine(backend)
+    got = eng.attention(q, k, v, causal=True)
+    kb = jnp.repeat(k, h // kv, axis=2)
+    vb = jnp.repeat(v, h // kv, axis=2)
+    want = eng.attention(q, kb, vb, causal=True)
+    _assert_close(got, want, jnp.float32)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_causal_kv_len_chunked_prefill(backend):
+    """causal + kv_len right-aligns queries against the LIVE extent, not
+    the buffer length: prefilling Sq new tokens into a larger cache buffer
+    equals causal attention over the kv_len-key prefix.  Covers both the
+    'cache exactly the new tokens' (kv_len == Sq) and the continuation
+    (kv_len > Sq) cases."""
+    q, k, v = _mk(11, 2, 4, 8, 8, 2, 16)
+    eng = make_engine(backend)
+    for kvl in (4, 6):
+        got = eng.attention(q, k, v, causal=True, kv_len=jnp.int32(kvl))
+        want = ref.flash_attention_ref(q, k[:, :kvl], v[:, :kvl],
+                                       causal=True)
+        _assert_close(got, want, jnp.float32)
+    # and specifically NOT the non-causal prefix attention
+    got4 = eng.attention(q, k, v, causal=True, kv_len=jnp.int32(4))
+    noncausal = ref.flash_attention_ref(q, k[:, :4], v[:, :4], causal=False)
+    assert not np.allclose(np.asarray(got4), np.asarray(noncausal),
+                           rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fully_masked_rows_return_zero_not_nan(backend):
+    """kv_len == 0 (empty slot) and causal rows past kv_len emit exact 0
+    on every backend — a NaN here would poison the lm head downstream."""
+    q, k, v = _mk(13, 2, 4, 8, 4, 2, 16)
+    eng = make_engine(backend)
+    out = eng.attention(q, k, v, causal=False,
+                        kv_len=jnp.array([0, 3], jnp.int32))
+    out = np.asarray(out)
+    assert np.all(out[0] == 0.0)
+    assert np.all(np.isfinite(out))
+    assert np.any(out[1] != 0.0)
+    # causal with kv_len < Sq: right alignment puts the EARLY query rows
+    # at negative positions — dead, exact 0; the tail rows are the live
+    # tokens at positions 0..kv_len-1.
+    out_c = np.asarray(eng.attention(q, k, v, causal=True,
+                                     kv_len=jnp.int32(2)))
+    assert np.all(np.isfinite(out_c))
+    assert np.all(out_c[:, :2] == 0.0)
+    want_live = ref.flash_attention_ref(q[:, 2:], k[:, :2], v[:, :2],
+                                        causal=True)
+    _assert_close(out_c[:, 2:], want_live, jnp.float32)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_oversized_kv_len_clamps_to_skv(backend):
+    """kv_len beyond the key buffer clamps to Skv on every backend — an
+    oversized cache-extent value (bookkeeping bug upstream) must not
+    silently change the causal alignment per backend."""
+    q, k, v = _mk(17, 1, 8, 8, 4, 2, 8)
+    eng = make_engine(backend)
+    for causal in (True, False):
+        got = eng.attention(q, k, v, causal=causal, kv_len=jnp.int32(12))
+        want = eng.attention(q, k, v, causal=causal, kv_len=jnp.int32(8))
+        _assert_close(got, want, jnp.float32)
+        plain = make_engine("ref").attention(q, k, v, causal=causal)
+        _assert_close(got, plain, jnp.float32)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_array_valued_sm_scale(backend):
+    """sm_scale may be a traced/array value (a learned temperature) on
+    every backend, and matches the same scale passed as a python float."""
+    q, k, v = _mk(19, 1, 32, 32, 4, 2, 16)
+    eng = make_engine(backend)
+    got = eng.attention(q, k, v, causal=True, sm_scale=jnp.float32(0.1))
+    want = make_engine("ref").attention(q, k, v, causal=True, sm_scale=0.1)
+    _assert_close(got, want, jnp.float32)
+
+
+# ---------------------------------------------------------- validation ---
+
+def test_non_dividing_head_ratio_rejected():
+    eng = make_engine("xla")
+    q, k, v = _mk(0, 1, 8, 8, 6, 4, 8)
+    with pytest.raises(ValueError, match="H % KV == 0"):
+        eng.attention(q, k, v)
+
+
+def test_more_kv_than_query_heads_rejected():
+    eng = make_engine("xla")
+    q, k, v = _mk(0, 1, 8, 8, 2, 4, 8)
+    with pytest.raises(ValueError, match="KV <= H"):
+        eng.attention(q, k, v)
+
+
+def test_dtype_mismatch_rejected():
+    eng = make_engine("xla")
+    q, k, v = _mk(0, 1, 8, 8, 4, 2, 8)
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        eng.attention(q, k.astype(jnp.bfloat16), v)
+
+
+def test_mismatched_kv_shapes_rejected():
+    eng = make_engine("xla")
+    q, k, v = _mk(0, 1, 8, 8, 4, 2, 8)
+    with pytest.raises(ValueError, match="k/v shapes differ"):
+        eng.attention(q, k, v[:, :4])
+
+
+def test_bad_kv_len_shape_rejected():
+    eng = make_engine("xla")
+    q, k, v = _mk(0, 2, 8, 8, 4, 2, 8)
+    with pytest.raises(ValueError, match="kv_len"):
+        eng.attention(q, k, v, kv_len=jnp.zeros((3,), jnp.int32))
+    with pytest.raises(ValueError, match="kv_len"):
+        eng.attention(q, k, v, kv_len=jnp.zeros((2, 2), jnp.int32))
+
+
+# ------------------------------------------- no-H-broadcast regression ---
+
+def _walk_eqns(jaxpr):
+    """All equations of a jaxpr, recursing into sub-jaxprs (scan bodies,
+    pjit calls, interpret-mode pallas_call)."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for val in eqn.params.values():
+            vals = val if isinstance(val, (tuple, list)) else [val]
+            for sub in vals:
+                if isinstance(sub, jax.core.ClosedJaxpr):
+                    yield from _walk_eqns(sub.jaxpr)
+                elif isinstance(sub, jax.core.Jaxpr):
+                    yield from _walk_eqns(sub)
+
+
+def _has_subjaxpr(eqn):
+    for val in eqn.params.values():
+        vals = val if isinstance(val, (tuple, list)) else [val]
+        if any(isinstance(s, (jax.core.ClosedJaxpr, jax.core.Jaxpr))
+               for s in vals):
+            return True
+    return False
+
+
+def _broadcast_fingerprints(jaxpr, B, S, H, KV, hd):
+    """Equations that materialize an H-broadcast of a (B, S, KV, hd) K/V:
+    either the final suspect->(B, S, H, hd) step of a repeat/tile/gather,
+    or the (B, S, KV, G, hd) broadcast intermediate itself.  Only LEAF
+    equations are flagged — call-like eqns (pjit, scan, pallas_call)
+    aggregate their whole body's input->output and are instead recursed
+    into, where any real broadcast shows up as a leaf."""
+    G = H // KV
+    suspects = {(B, S, KV, hd), (B, S, KV, 1, hd), (B, S, KV, G, hd)}
+    flagged = []
+    for eqn in _walk_eqns(jaxpr):
+        if _has_subjaxpr(eqn):
+            continue
+        ins = {tuple(getattr(a.aval, "shape", ())) for a in eqn.invars
+               if hasattr(a, "aval")}
+        outs = {tuple(v.aval.shape) for v in eqn.outvars}
+        if not (ins & suspects):
+            continue
+        if (B, S, H, hd) in outs or (B, S, KV, G, hd) in outs:
+            flagged.append(eqn)
+    return flagged
+
+
+def test_prefill_jaxpr_has_no_kv_h_broadcast():
+    """Trace-level regression: on the kernel-backed (pallas) path, the KV
+    operand stays (B, S, KV, hd) from projection to pallas_call — no
+    equation anywhere in the prefill jaxpr expands it toward H heads.  A
+    reintroduced ``jnp.repeat(k, G, axis=2)`` (which lowers to exactly the
+    flagged broadcast+reshape fingerprint) fails this test."""
+    cfg = reduced(get_arch("qwen2-0.5b"))             # H=4, KV=2
+    B, S = 2, 16
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    eng = make_engine("pallas")
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jnp.zeros((B, S), jnp.int32)
+    step = make_prefill_step(eng, cfg)
+    closed = jax.make_jaxpr(lambda p, t: step(p, {"tokens": t}))(params,
+                                                                 toks)
+    flagged = _broadcast_fingerprints(closed.jaxpr, B, S, H, KV, hd)
+    assert not flagged, (
+        "prefill trace materializes an H-broadcast of K/V:\n"
+        + "\n".join(str(e) for e in flagged))
+    # the detector itself must catch the old formulation
+    def repeat_prefill(k):
+        return jnp.repeat(k, H // KV, axis=2)
+    bad = jax.make_jaxpr(repeat_prefill)(jnp.zeros((B, S, KV, hd)))
+    assert _broadcast_fingerprints(bad.jaxpr, B, S, H, KV, hd)
+
+
+def test_attention_dispatch_receives_compact_kv():
+    """Spy backend: the KV operand that reaches the registry op during a
+    GQA prefill is the compact (B, S, KV, hd) tensor, end-to-end."""
+    cfg = reduced(get_arch("qwen2-0.5b"))             # H=4, KV=2
+    B, S = 2, 16
+    seen = []
+    xla = backends.get_backend("xla")
+
+    def spy_attention(q, k, v, **kw):
+        seen.append((tuple(q.shape), tuple(k.shape)))
+        return xla.op("attention")(q, k, v, **kw)
+
+    register_backend("spy-attn", dict(xla.ops, attention=spy_attention),
+                     overwrite=True)
+    try:
+        eng = make_engine("spy-attn")
+        params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+        toks = jnp.zeros((B, S), jnp.int32)
+        step = make_prefill_step(eng, cfg)
+        step(params, {"tokens": toks})
+    finally:
+        backends.unregister_backend("spy-attn")
+    assert seen, "prefill never dispatched the registry attention op"
+    for q_shape, k_shape in seen:
+        assert q_shape == (B, S, cfg.n_heads, cfg.head_dim)
+        assert k_shape == (B, S, cfg.n_kv_heads, cfg.head_dim)
+
+
+def test_decode_dispatch_receives_compact_kv():
+    """Same end-to-end guarantee for gqa_decode: the registry op sees the
+    compact cache, masked by kv_len, never an H-broadcast."""
+    from repro.models import attention as attn
+    from repro.models.common import rope_table
+    cfg = reduced(get_arch("qwen2-0.5b"))
+    B, S_max = 2, 32
+    seen = []
+    xla = backends.get_backend("xla")
+
+    def spy_attention(q, k, v, *, kv_len=None, **kw):
+        seen.append((tuple(k.shape), kv_len is not None))
+        return xla.op("attention")(q, k, v, kv_len=kv_len, **kw)
+
+    register_backend("spy-attn", dict(xla.ops, attention=spy_attention),
+                     overwrite=True)
+    try:
+        eng = make_engine("spy-attn")
+        p = attn.gqa_init(jax.random.PRNGKey(0), cfg)
+        cache = {
+            "k": jnp.zeros((B, S_max, cfg.n_kv_heads, cfg.head_dim)),
+            "v": jnp.zeros((B, S_max, cfg.n_kv_heads, cfg.head_dim))}
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, 1, cfg.d_model))
+        pos = jnp.array(4, jnp.int32)
+        cos, sin = rope_table(pos[None], cfg.head_dim, cfg.rope_theta)
+        attn.gqa_decode(eng, p, x, cache, pos, cos, sin, cfg)
+    finally:
+        backends.unregister_backend("spy-attn")
+    assert seen == [((B, S_max, cfg.n_kv_heads, cfg.head_dim), True)]

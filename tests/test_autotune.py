@@ -9,7 +9,10 @@ Covers the ISSUE 3 acceptance criteria:
   * corrupted / stale / wrong-device table files fall back to measurement
     without crashing, then get overwritten with a valid table;
   * `Network.compile(autotune="measure")` runs the measured warmup pass and
-    surfaces the records through `profile()` / `CompileCache.stats()`.
+    surfaces the records through `profile()` / `CompileCache.stats()`;
+  * attention (bq, bk) sequence tiles ride the same machinery (ISSUE 4):
+    MXU-aligned VMEM-filtered candidates, measured + persisted + served
+    with zero re-timing, keys visible in `autotune_report()`.
 """
 import json
 import os
@@ -280,6 +283,86 @@ def test_measured_pick_matches_heuristic_numerics():
     backends.clear_tile_cache()
     backends.set_autotune_policy("measure")
     got = eng.matmul(x, w, act="leaky")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------- attention (bq, bk) ---
+
+def _attention(b=1, sq=64, skv=64, h=4, kv=2, d=16):
+    eng = make_engine("pallas")
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, skv, kv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, skv, kv, d), jnp.float32)
+    return eng.attention(q, k, v, causal=True)
+
+
+def test_attention_candidates_mxu_aligned_and_vmem_filtered():
+    """bq/bk sequence-tile candidates: heuristic pick first, MXU-aligned
+    (bq mult of 8 sublanes, bk mult of 128 lanes), capped at the padded
+    sequence extents, filtered to the grouped-KV VMEM working set."""
+    for dims in [(1, 256, 256, 8, 2, 64),     # even, GQA
+                 (2, 33, 33, 14, 2, 64),      # odd S (padded path)
+                 (1, 1, 128, 8, 1, 64),       # decode shape, MQA
+                 (1, 4096, 4096, 16, 16, 128)]:  # budget-limited MHA
+        base = kernel_ops.default_attention_blocks(*dims, "float32")
+        cands = kernel_ops.candidate_attention_blocks(*dims, "float32")
+        assert cands[0] == base
+        assert len(cands) == len(set(cands)) >= 1
+        _, sq, skv, _, _, d = dims
+        for bq, bk in cands:
+            assert bq % 8 == 0 and bk % 128 == 0
+            assert bq <= max(512, kernel_ops._round_up(sq, 8))
+            assert kernel_ops._attention_working_set(
+                bq, bk, d, 4) <= kernel_ops._VMEM_BUDGET
+
+
+def test_attention_key_measured_recorded_and_in_report():
+    backends.set_autotune_policy("measure")
+    _attention()
+    st = backends.cache_stats()
+    assert st["measured"] == 1
+    att = {k: r for k, r in backends.autotune_report().items()
+           if k.startswith('["attention"')}
+    assert len(att) == 1
+    (key, rec), = att.items()
+    assert rec["source"] == "measured"
+    assert len(tuple(rec["pick"])) == 2        # (bq, bk), not (bm, bk, bn)
+    assert tuple(rec["pick"]) in {tuple(c) for c, _ in
+                                  rec["candidates_timed"]}
+    # persisted alongside the GEMM keys in the same per-device table
+    with open(autotune.table_path()) as f:
+        table = json.load(f)
+    assert key in table["entries"]
+
+
+def test_attention_persisted_roundtrip_zero_retiming(monkeypatch):
+    backends.set_autotune_policy("measure")
+    _attention()
+    (key, rec), = backends.autotune_report().items()
+
+    _fresh_process()
+
+    def _no_timing(*a, **kw):
+        raise AssertionError("re-timed a persisted attention pick")
+    monkeypatch.setattr(autotune, "time_thunk", _no_timing)
+
+    _attention()
+    st = backends.cache_stats()
+    assert st["measured"] == 0 and st["persisted"] == 1
+    got = backends.autotune_report()[key]
+    assert got["pick"] == rec["pick"] and got["source"] == "persisted"
+
+
+def test_attention_measured_pick_matches_heuristic_numerics():
+    """Sequence tiling only changes the schedule, never the math — the
+    measured pick agrees with the heuristic pick's output."""
+    backends.set_autotune_policy("heuristic")
+    want = _attention(sq=33, skv=33)
+    backends.clear_tile_cache()
+    backends.set_autotune_policy("measure")
+    got = _attention(sq=33, skv=33)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-6, atol=1e-6)
 

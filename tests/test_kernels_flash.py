@@ -1,4 +1,11 @@
-"""Flash-attention kernel vs pure-jnp oracle (interpret mode)."""
+"""Flash-attention kernel vs pure-jnp oracle (interpret mode).
+
+The kernel is grouped-KV native: q (B, H, Sq, D), k/v (B, KV, Skv, D) with
+H % KV == 0 — query head h reads kv-head h // (H/KV) through the BlockSpec
+index map, so MHA (KV == H), GQA and MQA (KV == 1) are all the same kernel
+with different index arithmetic.  The ops-level wrapper (kernels/ops.py)
+owns padding; the kernel itself requires exact tiling.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,42 +15,43 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 
 
-def _mk(key, b, sq, skv, h, d, dtype):
-    kq, kk, kv = jax.random.split(key, 3)
+def _mk(key, b, sq, skv, h, kv, d, dtype):
+    kq, kk, kv_ = jax.random.split(key, 3)
     q = jax.random.normal(kq, (b, sq, h, d), jnp.float32).astype(dtype)
-    k = jax.random.normal(kk, (b, skv, h, d), jnp.float32).astype(dtype)
-    v = jax.random.normal(kv, (b, skv, h, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(kk, (b, skv, kv, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(kv_, (b, skv, kv, d), jnp.float32).astype(dtype)
     return q, k, v
 
 
 def _kernel_layout(x):
-    # (B, S, H, D) -> (B*H, S, D)
-    b, s, h, d = x.shape
-    return x.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    # engine (B, S, heads, D) -> kernel (B, heads, S, D)
+    return x.transpose(0, 2, 1, 3)
 
 
-def _back(x, b, h):
-    bh, s, d = x.shape
-    return x.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+def _back(x):
+    return x.transpose(0, 2, 1, 3)
 
 
 CASES = [
-    # b, sq, skv, h, d, causal
-    (1, 128, 128, 2, 64, True),
-    (2, 256, 256, 1, 128, True),
-    (1, 128, 256, 2, 64, True),    # right-aligned causal (q shorter than kv)
-    (1, 128, 128, 2, 64, False),
-    (2, 512, 512, 1, 64, True),
+    # b, sq, skv, h, kv, d, causal
+    (1, 128, 128, 2, 2, 64, True),     # MHA
+    (2, 256, 256, 1, 1, 128, True),
+    (1, 128, 256, 2, 2, 64, True),     # right-aligned causal (q shorter)
+    (1, 128, 128, 2, 2, 64, False),
+    (1, 128, 128, 4, 2, 64, True),     # GQA G=2
+    (1, 128, 256, 6, 2, 32, True),     # GQA G=3, right-aligned
+    (2, 128, 128, 4, 1, 64, False),    # MQA
 ]
 
 
-@pytest.mark.parametrize("b,sq,skv,h,d,causal", CASES)
+@pytest.mark.parametrize("b,sq,skv,h,kv,d,causal", CASES)
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_flash_matches_oracle(b, sq, skv, h, d, causal, dtype):
-    q, k, v = _mk(jax.random.PRNGKey(sq + skv + h), b, sq, skv, h, d, dtype)
+def test_flash_matches_oracle(b, sq, skv, h, kv, d, causal, dtype):
+    q, k, v = _mk(jax.random.PRNGKey(sq + skv + h), b, sq, skv, h, kv, d,
+                  dtype)
     got = _back(flash_attention(_kernel_layout(q), _kernel_layout(k),
                                 _kernel_layout(v), causal=causal,
-                                bq=128, bk=128, interpret=True), b, h)
+                                bq=128, bk=128, interpret=True))
     want = ref.flash_attention_ref(q, k, v, causal=causal)
     tol = 2e-4 if dtype == jnp.float32 else 2e-2
     np.testing.assert_allclose(np.asarray(got, np.float32),
@@ -52,10 +60,47 @@ def test_flash_matches_oracle(b, sq, skv, h, d, causal, dtype):
 
 
 def test_flash_block_shape_independence():
-    """Output must not depend on (bq, bk) tiling."""
-    q, k, v = _mk(jax.random.PRNGKey(0), 1, 256, 256, 2, 64, jnp.float32)
+    """Output must not depend on (bq, bk) tiling — grouped case included."""
+    q, k, v = _mk(jax.random.PRNGKey(0), 1, 256, 256, 4, 2, 64, jnp.float32)
     ql, kl, vl = map(_kernel_layout, (q, k, v))
     a = flash_attention(ql, kl, vl, bq=64, bk=64, interpret=True)
     b_ = flash_attention(ql, kl, vl, bq=256, bk=128, interpret=True)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_kv_len_masks_keys_per_batch():
+    """kv_len masks keys at/beyond the per-batch length — equivalent to
+    attending a prefix of the key sequence."""
+    b, s, h, kv, d = 2, 128, 4, 2, 32
+    q, k, v = _mk(jax.random.PRNGKey(7), b, s, s, h, kv, d, jnp.float32)
+    kvl = jnp.array([37, 128], jnp.int32)
+    got = _back(flash_attention(_kernel_layout(q), _kernel_layout(k),
+                                _kernel_layout(v), causal=False,
+                                bq=64, bk=64, kv_len=kvl.reshape(b, 1),
+                                interpret=True))
+    want = ref.flash_attention_ref(q, k, v, causal=False, kv_len=kvl)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    # row 0 must equal plain attention over the 37-key prefix
+    want_prefix = ref.flash_attention_ref(q[:1], k[:1, :37], v[:1, :37],
+                                          causal=False)
+    np.testing.assert_allclose(np.asarray(got[:1]), np.asarray(want_prefix),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_q_offset_keeps_diagonal_on_padded_keys():
+    """With keys padded past the real Skv, an explicit q_offset pins the
+    causal diagonal to the REAL lengths and kv_len masks the padding —
+    the wrapper's exactness contract."""
+    b, sq, skv, h, kv, d = 1, 64, 96, 2, 1, 32
+    q, k, v = _mk(jax.random.PRNGKey(3), b, sq, skv, h, kv, d, jnp.float32)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    kp = jnp.pad(_kernel_layout(k), ((0, 0), (0, 0), (0, 32), (0, 0)))
+    vp = jnp.pad(_kernel_layout(v), ((0, 0), (0, 0), (0, 32), (0, 0)))
+    got = _back(flash_attention(
+        _kernel_layout(q), kp, vp, causal=True, bq=64, bk=64,
+        kv_len=jnp.full((b, 1), skv, jnp.int32), q_offset=skv - sq,
+        interpret=True))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
