@@ -42,6 +42,13 @@ ATTENTION_PROBLEMS = [
     ((2, 1, 8, 64), (2, 128, 1, 64)),       # MQA decode against a cache
 ]
 
+# Backward ("attention_bwd") tile problems: the training shapes — prefill
+# geometries only (decode is never differentiated).  These resolve the
+# backward keys the custom-VJP kernels consult at backward-trace time, so
+# `--check-persisted` proves a fresh process trains with zero
+# measurements too.
+ATTENTION_BWD_PROBLEMS = ATTENTION_PROBLEMS[:2]
+
 
 def run() -> list[tuple[str, float, str]]:
     rows = []
@@ -76,6 +83,25 @@ def run() -> list[tuple[str, float, str]]:
             (_, sq, skv, h, kv, _) = dims
             rows.append((
                 f"autotune_sweep/attention_{sq}x{skv}_h{h}kv{kv}",
+                pick_ms * 1e3,
+                f"heur={'x'.join(map(str, heur))}:{heur_ms:.3f}ms "
+                f"pick={'x'.join(map(str, pick))}:{pick_ms:.3f}ms "
+                f"source={rec.get('source', '?')} "
+                f"speedup={heur_ms / pick_ms:.2f}x"))
+        for shapes in ATTENTION_BWD_PROBLEMS:
+            dims = kernel_ops.attention_dims(shapes)
+            heur = kernel_ops.default_attention_bwd_blocks(*dims, "float32")
+            pick = pallas.tiles("attention_bwd", shapes, "float32")
+            key = autotune.key_str("attention_bwd", shapes, "float32",
+                                   "pallas")
+            rec = backends.autotune_report().get(key, {})
+            heur_ms = autotune.time_thunk(
+                kernel_ops.attention_bwd_bench_thunk(*dims, "float32", heur))
+            pick_ms = autotune.time_thunk(
+                kernel_ops.attention_bwd_bench_thunk(*dims, "float32", pick))
+            (_, sq, skv, h, kv, _) = dims
+            rows.append((
+                f"autotune_sweep/attention_bwd_{sq}x{skv}_h{h}kv{kv}",
                 pick_ms * 1e3,
                 f"heur={'x'.join(map(str, heur))}:{heur_ms:.3f}ms "
                 f"pick={'x'.join(map(str, pick))}:{pick_ms:.3f}ms "

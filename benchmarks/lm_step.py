@@ -1,19 +1,26 @@
 """Reduced-config LM step timings on CPU: train / prefill / decode per arch
 family — the substrate-level benchmark (one row per model family) — plus a
-grouped-vs-broadcast GQA prefill head-to-head.
+grouped-vs-broadcast GQA prefill head-to-head and a kernel-vs-blockwise
+TRAIN-STEP head-to-head.
 
-The head-to-head times the SAME attention math two ways through the
-registry `attention` op: the grouped-KV native dispatch (compact
+The prefill head-to-head times the SAME attention math two ways through
+the registry `attention` op: the grouped-KV native dispatch (compact
 (B, S, KV, hd) K/V, the shipped path) against a caller-side
 ``jnp.repeat`` H-broadcast (the pre-ISSUE-4 path), and reports the
 wall-clock ratio alongside the K/V bytes each variant materializes
 (`kvcache.kv_broadcast_bytes`) and, where the backend exposes it, the
 compiled executable's peak temp memory delta.
 
+The train head-to-head differentiates the SAME loss two ways: through the
+registry op (the kernel path — now the training default, since the flash
+kernel carries a custom VJP) and through the retired blockwise-jnp
+fallback (``kernel_attention=False``), interleaved-median timed, with the
+max relative gradient error between the two reported alongside.
+
     PYTHONPATH=src python benchmarks/lm_step.py            # full rows
-    PYTHONPATH=src python benchmarks/lm_step.py --smoke    # CI: head-to-head
-                                                           # + one grouped
-                                                           # prefill step
+    PYTHONPATH=src python benchmarks/lm_step.py --smoke    # CI: head-to-heads
+                                                           # + dispatch/
+                                                           # kernel-VJP gates
 """
 from __future__ import annotations
 
@@ -145,6 +152,45 @@ def gqa_prefill_headtohead(*, B=2, S=256, n_layers=2, reps=3
     return rows
 
 
+def train_grad_headtohead(*, B=2, S=64, n_layers=2, reps=5
+                          ) -> tuple[list[tuple[str, float, str]], float]:
+    """Kernel-path vs blockwise-fallback training gradients: same loss,
+    same engine, the only difference is which attention formulation the
+    differentiated trace runs.  Reports wall-clock (interleaved median)
+    and the max relative error between the two gradient trees."""
+    cfg = dataclasses.replace(reduced(get_arch("qwen2-0.5b")),
+                              n_layers=n_layers)
+    eng = make_engine("xla", "fp32_strict")
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+
+    def loss(p, kernel_attention):
+        return tfm.loss_fn(eng, cfg, p, batch, ce_chunk=32, n_q_chunks=4,
+                           kernel_attention=kernel_attention)
+
+    g_kern = jax.jit(jax.value_and_grad(lambda p: loss(p, True)))
+    g_block = jax.jit(jax.value_and_grad(lambda p: loss(p, False)))
+    med = _interleaved_median(
+        {"k": lambda: jax.block_until_ready(g_kern(params)[0]),
+         "b": lambda: jax.block_until_ready(g_block(params)[0])},
+        reps=max(reps, 5))
+    _, gk = g_kern(params)
+    _, gb = g_block(params)
+    rel = max(jax.tree_util.tree_leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))
+                           / (jnp.max(jnp.abs(b)) + 1e-12)), gk, gb)))
+    return [
+        ("lm_step/train_grad_kernel", med["k"] * 1e6,
+         f"B={B} S={S} layers={n_layers} registry-op path"),
+        ("lm_step/train_grad_blockwise", med["b"] * 1e6,
+         f"B={B} S={S} layers={n_layers}"
+         f" kernel_speedup={med['b'] / med['k']:.2f}x"
+         f" grad_max_rel_err={rel:.2e}"),
+    ], rel
+
+
 def run() -> list[tuple[str, float, str]]:
     rows = []
     eng = make_engine("xla", "fp32_strict")
@@ -183,13 +229,17 @@ def run() -> list[tuple[str, float, str]]:
                 dec(params, caches, tok, pos)[0]))
             rows.append((f"lm_step/{arch}/decode", t * 1e6, f"B={B}"))
     rows.extend(gqa_prefill_headtohead())
+    rows.extend(train_grad_headtohead()[0])
     return rows
 
 
 def smoke() -> list[tuple[str, float, str]]:
-    """CI smoke: the grouped-vs-broadcast head-to-head at a small size plus
-    one grouped prefill step asserted to dispatch the registry op with
-    compact KV (no jnp.repeat in the dispatch path)."""
+    """CI smoke: the grouped-vs-broadcast and kernel-vs-blockwise
+    head-to-heads at a small size, one grouped prefill step asserted to
+    dispatch the registry op with compact KV (no jnp.repeat in the
+    dispatch path), the DIFFERENTIATED train trace asserted to dispatch
+    the registry attention op with matching gradients, and one train step
+    through the pallas flash kernel's custom VJP asserted finite."""
     rows = gqa_prefill_headtohead(B=1, S=64, n_layers=1, reps=1)
     cfg = reduced(get_arch("qwen2-0.5b"))
     eng = make_engine("xla", "fp32_strict")
@@ -213,6 +263,60 @@ def smoke() -> list[tuple[str, float, str]]:
                          f"{kv_shapes} != {{{want}}}")
     rows.append(("lm_step/smoke_grouped_prefill", 0.0,
                  f"attention_dispatches={n_att} kv_cache_shape={want}"))
+
+    # The DIFFERENTIATED trace dispatches the registry attention op (the
+    # kernel path — kernel_attention=False is retired) and its gradients
+    # match the blockwise formulation.
+    hh_rows, rel = train_grad_headtohead(B=1, S=32, n_layers=1, reps=1)
+    rows.extend(hh_rows)
+    snap = backends.dispatch_counts()
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    step = jax.jit(make_train_step(eng, cfg, opt.AdamWConfig(), ce_chunk=32,
+                                   n_q_chunks=4))
+    _, _, metrics = step(params, opt.adamw_init(params), batch)
+    loss = float(jax.block_until_ready(metrics["loss"]))
+    n_att = backends.counts_since(snap).get(("xla", "attention"), 0)
+    if n_att < 1:
+        raise SystemExit("FAIL: differentiated train trace dispatched no "
+                         "registry attention op (blockwise fallback?)")
+    if rel > 1e-5:
+        raise SystemExit(f"FAIL: kernel-vs-blockwise gradient parity "
+                         f"{rel:.2e} > 1e-5")
+    rows.append(("lm_step/smoke_train_dispatches_kernel_op", 0.0,
+                 f"attention_dispatches={n_att} loss={loss:.4f} "
+                 f"grad_max_rel_err={rel:.2e}"))
+
+    # And the literal pallas flash kernel trains: a hybrid backend (xla
+    # GEMMs + the pallas attention impl with its custom-VJP backward
+    # kernels) runs one full train step off-mesh.
+    pallas = backends.get_backend("pallas")
+    xla = backends.get_backend("xla")
+    from repro.core import register_backend
+    register_backend("train-flash",
+                     dict(xla.ops, attention=pallas.op("attention")),
+                     tile_picker=pallas.tile_picker,
+                     tile_candidates=pallas.tile_candidates,
+                     tile_bench=pallas.tile_bench, overwrite=True)
+    try:
+        feng = make_engine("train-flash", "fp32_strict")
+        snap = backends.dispatch_counts()
+        step = jax.jit(make_train_step(feng, cfg, opt.AdamWConfig(),
+                                       ce_chunk=32, n_q_chunks=4))
+        _, _, metrics = step(params, opt.adamw_init(params), batch)
+        floss = float(jax.block_until_ready(metrics["loss"]))
+        n_att = backends.counts_since(snap).get(("train-flash", "attention"),
+                                                0)
+        if n_att < 1 or not jnp.isfinite(floss):
+            raise SystemExit(
+                f"FAIL: flash-kernel train step dispatched {n_att} "
+                f"attention ops, loss={floss}")
+        if abs(floss - loss) > 1e-3:
+            raise SystemExit(f"FAIL: flash-kernel train loss {floss} != "
+                             f"registry-op train loss {loss}")
+    finally:
+        backends.unregister_backend("train-flash")
+    rows.append(("lm_step/smoke_train_flash_kernel_vjp", 0.0,
+                 f"attention_dispatches={n_att} loss={floss:.4f}"))
     return rows
 
 

@@ -48,6 +48,7 @@ from __future__ import annotations
 import collections
 import contextlib
 import dataclasses
+import functools
 import os
 import warnings
 from typing import Any, Callable, Mapping
@@ -84,12 +85,24 @@ class Backend:
     builds a zero-arg callable running one compiled call with those tiles.
     A backend with only a picker autotunes heuristically; one with all
     three participates in `autotune="measure"`.
+
+    `differentiable` is the per-op autodiff capability: the subset of the
+    registered ops that support `jax.grad` through their implementation
+    (a custom VJP, or plain differentiable jnp).  The engine consults it
+    at dispatch and raises a CLEAR NotImplementedError when a
+    non-differentiable op is differentiated — instead of the bare
+    AssertionError a VJP-less pallas_call dies with deep inside autodiff.
     """
     name: str
     ops: Mapping[str, Callable]
     tile_picker: Callable[[str, tuple, Any], tuple] | None = None
     tile_candidates: Callable[[str, tuple, Any], list] | None = None
     tile_bench: Callable[..., Callable | None] | None = None
+    differentiable: frozenset = frozenset(OP_SET)
+
+    def supports_grad(self, op: str) -> bool:
+        """Whether `jax.grad` may flow through this backend's `op`."""
+        return op in self.differentiable
 
     def op(self, name: str) -> Callable:
         """The registered impl for `name`.
@@ -120,7 +133,7 @@ _REGISTRY: dict[str, Backend] = {}
 
 def register_backend(name: str, ops: Mapping[str, Callable], *,
                      tile_picker=None, tile_candidates=None, tile_bench=None,
-                     overwrite: bool = False) -> Backend:
+                     differentiable=None, overwrite: bool = False) -> Backend:
     """Register a backend implementing (a subset of) OP_SET.
 
     Args:
@@ -131,12 +144,19 @@ def register_backend(name: str, ops: Mapping[str, Callable], *,
       tile_candidates / tile_bench: optional measured-autotune hooks (see
         `Backend` and docs/autotune.md); ignored unless the autotune policy
         is "measure".
+      differentiable: iterable of op names `jax.grad` may flow through, or
+        None meaning ALL registered ops (the right default for plain-jnp
+        backends, which JAX differentiates natively).  Kernel backends
+        whose ops lack a VJP must name only the ops that have one — the
+        engine turns a differentiated dispatch of any other op into a
+        clear NotImplementedError.
       overwrite: replace an existing registration instead of raising.
 
     Returns the registered `Backend`.
 
-    Raises ValueError on a duplicate name without `overwrite`, or on op
-    names outside OP_SET — typos fail at registration, not dispatch.
+    Raises ValueError on a duplicate name without `overwrite`, on op
+    names outside OP_SET — typos fail at registration, not dispatch — or
+    on a `differentiable` entry naming an unregistered op.
     """
     if name in _REGISTRY and not overwrite:
         raise ValueError(f"backend {name!r} already registered "
@@ -144,8 +164,14 @@ def register_backend(name: str, ops: Mapping[str, Callable], *,
     unknown = set(ops) - set(OP_SET)
     if unknown:
         raise ValueError(f"unknown ops {sorted(unknown)}; op set is {OP_SET}")
+    diff = frozenset(ops if differentiable is None else differentiable)
+    if not diff <= set(ops):
+        raise ValueError(f"differentiable names unregistered ops "
+                         f"{sorted(diff - set(ops))}; registered: "
+                         f"{sorted(ops)}")
     be = Backend(name=name, ops=dict(ops), tile_picker=tile_picker,
-                 tile_candidates=tile_candidates, tile_bench=tile_bench)
+                 tile_candidates=tile_candidates, tile_bench=tile_bench,
+                 differentiable=diff)
     _REGISTRY[name] = be
     return be
 
@@ -170,6 +196,46 @@ def list_backends() -> tuple[str, ...]:
 def unregister_backend(name: str) -> None:
     """Remove a backend registration (no-op when absent)."""
     _REGISTRY.pop(name, None)
+
+
+# --------------------------------------------------- autodiff capability ---
+# A kernel op without a VJP dies deep inside autodiff with a bare
+# AssertionError when differentiated.  The engine instead threads operands
+# of ops the backend does NOT declare differentiable through this identity
+# custom_jvp: forward passes are untouched, and any differentiation hits
+# the jvp rule — which raises a clear, actionable error at trace time.
+
+@functools.partial(jax.custom_jvp, nondiff_argnums=(0, 1))
+def _nondiff_guard(op, backend, *operands):
+    return operands
+
+
+@_nondiff_guard.defjvp
+def _nondiff_guard_jvp(op, backend, primals, tangents):
+    raise NotImplementedError(
+        f"op {op!r} on backend {backend!r} is not registered as "
+        f"differentiable — jax.grad cannot flow through its kernel.  Use a "
+        f"backend that declares {op!r} in `differentiable` (e.g. 'xla'), "
+        f"or register the backend with a custom-VJP implementation.")
+
+
+def guard_grad(backend: Backend, op: str, *operands):
+    """Pass `operands` through unchanged, arming the clear
+    not-differentiable error unless `backend` declares `op` differentiable.
+    Called by the engine on every dispatch with ALL gradient-carrying
+    operands — the epilogue `scale`/`shift` vectors and a traced
+    `sm_scale` included, since a bias gradient alone reaches the kernel's
+    backward too.  None and python scalars pass through untouched (no
+    tangent can flow through a non-array).  Free after jit when armed, a
+    no-op when the op supports autodiff."""
+    if backend.supports_grad(op):
+        return operands
+    arrays = [x for x in operands if isinstance(x, jax.Array)]
+    if not arrays:
+        return operands
+    guarded = iter(_nondiff_guard(op, backend.name, *arrays))
+    return tuple(next(guarded) if isinstance(x, jax.Array) else x
+                 for x in operands)
 
 
 # ------------------------------------------------------- autotune cache ---
@@ -408,6 +474,9 @@ def _pallas_tile_picker(op: str, shapes: tuple, dtype) -> tuple:
     if op == "attention":
         return kernel_ops.default_attention_blocks(
             *kernel_ops.attention_dims(shapes), dtype)
+    if op == "attention_bwd":
+        return kernel_ops.default_attention_bwd_blocks(
+            *kernel_ops.attention_dims(shapes), dtype)
     dims = gemm_dims(op, shapes)
     if dims is None:
         return ()
@@ -417,6 +486,9 @@ def _pallas_tile_picker(op: str, shapes: tuple, dtype) -> tuple:
 def _pallas_tile_candidates(op: str, shapes: tuple, dtype) -> list[tuple]:
     if op == "attention":
         return kernel_ops.candidate_attention_blocks(
+            *kernel_ops.attention_dims(shapes), dtype)
+    if op == "attention_bwd":
+        return kernel_ops.candidate_attention_bwd_blocks(
             *kernel_ops.attention_dims(shapes), dtype)
     dims = gemm_dims(op, shapes)
     if dims is None:
@@ -428,6 +500,10 @@ def _pallas_tile_bench(op: str, shapes: tuple, dtype, tiles: tuple,
                        interpret: bool):
     if op == "attention":
         return kernel_ops.attention_bench_thunk(
+            *kernel_ops.attention_dims(shapes), dtype, tiles,
+            interpret=interpret)
+    if op == "attention_bwd":
+        return kernel_ops.attention_bwd_bench_thunk(
             *kernel_ops.attention_dims(shapes), dtype, tiles,
             interpret=interpret)
     dims = gemm_dims(op, shapes)
@@ -511,6 +587,10 @@ def _xla_attention(q, k, v, *, causal, sm_scale, kv_len=None, ctx):
             .reshape(B, Sq, H, D).astype(q.dtype))
 
 
+# The flash attention kernel carries a custom VJP (backward kernels in
+# kernels/flash_attention.py) — attention trains on the kernel path.  The
+# GEMM kernels have no VJP yet: differentiating them raises the clear
+# capability error instead of pallas_call's bare AssertionError.
 register_backend("pallas", {
     "matmul": _pallas_matmul,
     "bmm": _pallas_bmm,
@@ -518,7 +598,8 @@ register_backend("pallas", {
     "attention": _pallas_attention,
 }, tile_picker=_pallas_tile_picker,
     tile_candidates=_pallas_tile_candidates,
-    tile_bench=_pallas_tile_bench)
+    tile_bench=_pallas_tile_bench,
+    differentiable=("attention",))
 
 register_backend("xla", {
     "matmul": _xla_matmul,

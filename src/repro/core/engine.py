@@ -60,6 +60,14 @@ class ComputeEngine:
     def _op(self, op: str):
         return backends.get_backend(self.backend).op(op)
 
+    def _guard(self, op: str, *operands):
+        """Arm the autodiff capability check: operands of an op the backend
+        does not declare `differentiable` pass through a guard whose jvp
+        raises a clear NotImplementedError — a VJP-less kernel op can then
+        never die with a bare AssertionError deep inside jax.grad."""
+        return backends.guard_grad(backends.get_backend(self.backend), op,
+                                   *operands)
+
     # --------------------------------------------------------------- ops ---
     def matmul(self, x, w, *, scale=None, shift=None, act: str = "linear",
                out_dtype=None):
@@ -81,6 +89,7 @@ class ComputeEngine:
         out_dtype = out_dtype or self.precision.compute_dtype
         xc = x.astype(self.precision.compute_dtype).reshape(-1, k)
         wc = w.astype(self.precision.compute_dtype)
+        xc, wc, scale, shift = self._guard("matmul", xc, wc, scale, shift)
         ctx = self._resolve("matmul", (xc.shape[0], k, n), xc.dtype)
         y = self._op("matmul")(xc, wc, scale, shift, act=act,
                                out_dtype=out_dtype, ctx=ctx)
@@ -97,6 +106,7 @@ class ComputeEngine:
         out_dtype = out_dtype or x.dtype
         xc = x.astype(self.precision.compute_dtype)
         wc = w.astype(self.precision.compute_dtype)
+        xc, wc = self._guard("bmm", xc, wc)
         ctx = self._resolve("bmm", (m, k, n), xc.dtype)
         return self._op("bmm")(xc, wc, out_dtype=out_dtype, ctx=ctx)
 
@@ -118,6 +128,7 @@ class ComputeEngine:
         out_dtype = out_dtype or self.precision.compute_dtype
         xc = x.astype(self.precision.compute_dtype)
         wc = w.astype(self.precision.compute_dtype)
+        xc, wc, scale, shift = self._guard("conv2d", xc, wc, scale, shift)
         ctx = self._resolve(
             "conv2d", (xc.shape, wc.shape[-1], size, stride, pad), xc.dtype)
         return self._op("conv2d")(xc, wc, scale, shift, size=size,
@@ -164,6 +175,8 @@ class ComputeEngine:
         qc = q.astype(self.precision.compute_dtype)
         kc = k.astype(self.precision.compute_dtype)
         vc = v.astype(self.precision.compute_dtype)
+        qc, kc, vc, sm_scale = self._guard("attention", qc, kc, vc,
+                                           sm_scale)
         ctx = self._resolve("attention", (qc.shape, kc.shape), qc.dtype)
         return self._op("attention")(qc, kc, vc, causal=causal,
                                      sm_scale=sm_scale, kv_len=kv_len,

@@ -21,13 +21,35 @@ An optional per-batch ``kv_len`` masks keys at/beyond the given length —
 this is what lets the ops-level wrapper zero-pad Skv to a block multiple
 (padded keys are masked out exactly) and what decode uses to attend a
 cache filled only up to ``pos``.
+
+The op is DIFFERENTIABLE via ``jax.custom_vjp``: the forward additionally
+emits the per-row softmax logsumexp residual, and two backward kernels
+recompute the probability tiles from (q, k, lse) — never materializing the
+S×S matrix in the backward either:
+
+  dQ    : same (B*H, Sq/bq, Skv/bk) grid as the forward, KV innermost,
+          a (bq, d) fp32 accumulator carrying across KV steps;
+  dK/dV : (B*KV, Skv/bk, G*Sq/bq) grid — one program per *kv-head* and KV
+          tile, with the innermost axis sweeping all G query heads of the
+          group and every query tile, accumulating into (bk, d) scratch.
+          Gradients come out in the compact (B, KV, Skv, D) layout: the
+          group reduction happens inside the kernel, so grouped KV never
+          broadcasts to H heads — in the backward pass either.
+
+Fully-masked rows (kv_len == 0, or rows past the causal extent) carry an
+lse residual of 0 and a probability tile forced to exact 0, so their
+dQ/dK/dV contributions are exact 0 — never NaN from the 0·logsumexp
+delta term.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 try:
@@ -42,15 +64,26 @@ _NEG_INF = -1e30
 _LANES = 128  # stats scratch is lane-replicated for TPU vector layout
 
 
+def _dot(a, b, dims):
+    return jax.lax.dot_general(a, b, (dims, ((), ())),
+                               preferred_element_type=jnp.float32,
+                               precision=jax.lax.Precision.HIGHEST)
+
+
 def _flash_kernel(*refs, nk: int, bq: int, bk: int, sm_scale: float,
                   causal: bool, q_offset: int, q_len: int,
-                  has_kv_len: bool):
+                  has_kv_len: bool, return_lse: bool):
     if has_kv_len:
-        q_ref, k_ref, v_ref, kvl_ref, o_ref, m_ref, l_ref, acc_ref = refs
+        q_ref, k_ref, v_ref, kvl_ref, *rest = refs
         kv_len = kvl_ref[0, 0]
     else:
-        q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
+        q_ref, k_ref, v_ref, *rest = refs
         kv_len = None
+    if return_lse:
+        o_ref, lse_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
+        lse_ref = None
     # Causal alignment: queries right-align against the LIVE key extent —
     # kv_len when given (per-batch, dynamic), else the static q_offset.
     if causal and kv_len is not None:
@@ -67,9 +100,7 @@ def _flash_kernel(*refs, nk: int, bq: int, bk: int, sm_scale: float,
         q = q_ref[0, 0].astype(jnp.float32)       # (bq, d)
         k = k_ref[0, 0].astype(jnp.float32)       # (bk, d)
         v = v_ref[0, 0].astype(jnp.float32)       # (bk, d)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32,
-                                precision=jax.lax.Precision.HIGHEST)
+        s = _dot(q, k, ((1,), (1,)))
         s = s * sm_scale                           # (bq, bk)
         kj = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
         if causal:
@@ -88,10 +119,7 @@ def _flash_kernel(*refs, nk: int, bq: int, bk: int, sm_scale: float,
         p = jnp.where(s > _NEG_INF * 0.5, p, 0.0)
         alpha = jnp.exp(m_prev - m_new)            # (bq, 1)
         l_new = l_ref[...][:, :1] * alpha + jnp.sum(p, -1, keepdims=True)
-        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-            precision=jax.lax.Precision.HIGHEST)
+        acc_ref[...] = acc_ref[...] * alpha + _dot(p, v, ((1,), (0,)))
         m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
         l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
 
@@ -111,14 +139,346 @@ def _flash_kernel(*refs, nk: int, bq: int, bk: int, sm_scale: float,
     @pl.when(j == nk - 1)
     def _finish():
         l = l_ref[...][:, :1]
-        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0 output
-        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        lsafe = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0 output
+        o_ref[0, 0] = (acc_ref[...] / lsafe).astype(o_ref.dtype)
+        if return_lse:
+            # Per-row softmax residual m + log(l) in the *scaled* score
+            # space; fully-masked rows store 0 — any finite value works,
+            # since the backward forces their probability tiles to exact 0.
+            m = m_ref[...][:, :1]
+            lse = jnp.where(l[:, 0] > 0.0, m[:, 0] + jnp.log(lsafe[:, 0]),
+                            0.0)
+            lse_ref[0, 0] = lse
+
+
+def _bwd_mask(*, i, j, bq, bk, causal, q_offset, kv_len):
+    """The live-entry mask of the forward pass, recomputed for a backward
+    tile: within the causal diagonal (global indices) and below kv_len."""
+    kj = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    live = None
+    if causal:
+        qi = q_offset + i * bq + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bk), 0)
+        live = kj <= qi
+    if kv_len is not None:
+        in_len = kj < kv_len
+        live = in_len if live is None else jnp.logical_and(live, in_len)
+    return live
+
+
+def _bwd_block_live(*, i, j, bq, bk, causal, q_offset, kv_len):
+    """pl.when condition mirroring the forward's block-skip rule."""
+    cond = None
+    if causal:
+        cond = j * bk <= q_offset + i * bq + bq - 1
+    if kv_len is not None:
+        in_len = j * bk < kv_len
+        cond = in_len if cond is None else jnp.logical_and(cond, in_len)
+    return cond
+
+
+def _flash_bwd_dq_kernel(*refs, nk: int, bq: int, bk: int, sm_scale: float,
+                         causal: bool, q_offset: int, q_len: int,
+                         has_kv_len: bool):
+    """dQ = (P ∘ (dO Vᵀ − Δ)) K · sm_scale, streamed over KV tiles.
+
+    Same grid/index-map family as the forward (one program per (b, h, query
+    tile), KV innermost); P is recomputed from (q, k, lse) so no S×S matrix
+    ever exists.  Δ (the rowsum(dO ∘ O) delta term) and lse arrive as
+    per-row operands.
+    """
+    if has_kv_len:
+        (q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, kvl_ref,
+         dq_ref, acc_ref) = refs
+        kv_len = kvl_ref[0, 0]
+    else:
+        (q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+         dq_ref, acc_ref) = refs
+        kv_len = None
+    if causal and kv_len is not None:
+        q_offset = kv_len - q_len
+    i, j = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)        # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)        # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)        # (bk, d)
+        do = do_ref[0, 0].astype(jnp.float32)      # (bq, d)
+        lse = lse_ref[0, 0].astype(jnp.float32)[:, None]      # (bq, 1)
+        delta = delta_ref[0, 0].astype(jnp.float32)[:, None]  # (bq, 1)
+        s = _dot(q, k, ((1,), (1,))) * sm_scale    # (bq, bk)
+        live = _bwd_mask(i=i, j=j, bq=bq, bk=bk, causal=causal,
+                         q_offset=q_offset, kv_len=kv_len)
+        p = jnp.exp(s - lse)                       # normalized: lse = m+log l
+        if live is not None:
+            p = jnp.where(live, p, 0.0)
+        dp = _dot(do, v, ((1,), (1,)))             # (bq, bk)
+        ds = p * (dp - delta) * sm_scale
+        acc_ref[...] += _dot(ds, k, ((1,), (0,)))
+
+    cond = _bwd_block_live(i=i, j=j, bq=bq, bk=bk, causal=causal,
+                           q_offset=q_offset, kv_len=kv_len)
+    if cond is None:
+        _body()
+    else:
+        pl.when(cond)(_body)
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        dq_ref[0, 0] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _flash_bwd_dkv_kernel(*refs, nq: int, nt: int, bq: int, bk: int,
+                          sm_scale: float, causal: bool, q_offset: int,
+                          q_len: int, has_kv_len: bool):
+    """dV = Pᵀ dO and dK = (P ∘ (dO Vᵀ − Δ))ᵀ Q · sm_scale per kv tile.
+
+    One program per (b, KV-HEAD, kv tile): the innermost grid axis sweeps
+    all G query heads of the group and every query tile, accumulating into
+    (bk, d) scratch — the group reduction the grouped layout requires
+    happens HERE, so dK/dV come out compact (B, KV, Skv, D) with no
+    H-broadcast anywhere in the backward.
+    """
+    if has_kv_len:
+        (q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, kvl_ref,
+         dk_ref, dv_ref, dk_acc, dv_acc) = refs
+        kv_len = kvl_ref[0, 0]
+    else:
+        (q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+         dk_ref, dv_ref, dk_acc, dv_acc) = refs
+        kv_len = None
+    if causal and kv_len is not None:
+        q_offset = kv_len - q_len
+    j, t = pl.program_id(1), pl.program_id(2)
+    i = t % nq                                     # query-tile index
+
+    @pl.when(t == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)        # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)        # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)        # (bk, d)
+        do = do_ref[0, 0].astype(jnp.float32)      # (bq, d)
+        lse = lse_ref[0, 0].astype(jnp.float32)[:, None]      # (bq, 1)
+        delta = delta_ref[0, 0].astype(jnp.float32)[:, None]  # (bq, 1)
+        s = _dot(q, k, ((1,), (1,))) * sm_scale    # (bq, bk)
+        live = _bwd_mask(i=i, j=j, bq=bq, bk=bk, causal=causal,
+                         q_offset=q_offset, kv_len=kv_len)
+        p = jnp.exp(s - lse)
+        if live is not None:
+            p = jnp.where(live, p, 0.0)
+        dv_acc[...] += _dot(p, do, ((0,), (0,)))   # pᵀ dO: (bk, d)
+        dp = _dot(do, v, ((1,), (1,)))             # (bq, bk)
+        ds = p * (dp - delta) * sm_scale
+        dk_acc[...] += _dot(ds, q, ((0,), (0,)))   # dsᵀ q: (bk, d)
+
+    cond = _bwd_block_live(i=i, j=j, bq=bq, bk=bk, causal=causal,
+                           q_offset=q_offset, kv_len=kv_len)
+    if cond is None:
+        _body()
+    else:
+        pl.when(cond)(_body)
+
+    @pl.when(t == nt - 1)
+    def _finish():
+        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Config:
+    """Hashable static configuration of one flash_attention call — the
+    nondiff arg of the custom_vjp, shared by forward and backward."""
+    causal: bool
+    sm_scale: float
+    bq: int
+    bk: int
+    bq_bwd: int            # 0 = resolve at backward-trace time
+    bk_bwd: int
+    q_offset: int
+    q_len: int
+    interpret: bool
+    # Engine-layout (q_shape, k_shape) for the "attention_bwd" autotune key,
+    # or None (direct kernel calls: backward reuses the forward tiles).
+    bwd_key: tuple | None = None
+
+
+def _compiler_params(cfg: _Config):
+    if cfg.interpret or _COMPILER_PARAMS is None:
+        return {}
+    return {"compiler_params": _COMPILER_PARAMS(
+        dimension_semantics=("parallel", "parallel", "arbitrary"))}
+
+
+def _forward(cfg: _Config, q, k, v, kvl, *, return_lse: bool):
+    b, h, sq, d = q.shape
+    _, kvh, skv, _ = k.shape
+    grp = h // kvh
+    bq, bk = cfg.bq, cfg.bk
+    grid = (b * h, sq // bq, skv // bk)
+    scratch = []
+    if pltpu is not None:
+        scratch = [pltpu.VMEM((bq, _LANES), jnp.float32),   # m
+                   pltpu.VMEM((bq, _LANES), jnp.float32),   # l
+                   pltpu.VMEM((bq, d), jnp.float32)]        # acc
+    kernel = functools.partial(
+        _flash_kernel, nk=grid[2], bq=bq, bk=bk, sm_scale=cfg.sm_scale,
+        causal=cfg.causal, q_offset=cfg.q_offset, q_len=cfg.q_len,
+        has_kv_len=kvl is not None, return_lse=return_lse)
+    q_spec = pl.BlockSpec((1, 1, bq, d), lambda g, i, j: (g // h, g % h, i, 0))
+    kv_spec = pl.BlockSpec((1, 1, bk, d),
+                           lambda g, i, j: (g // h, (g % h) // grp, j, 0))
+    in_specs = [q_spec, kv_spec, kv_spec]
+    operands = [q, k, v]
+    if kvl is not None:
+        in_specs.append(pl.BlockSpec((1, 1), lambda g, i, j: (g // h, 0)))
+        operands.append(kvl)
+    out_specs = q_spec
+    out_shape = jax.ShapeDtypeStruct((b, h, sq, d), q.dtype)
+    if return_lse:
+        lse_spec = pl.BlockSpec((1, 1, bq), lambda g, i, j: (g // h, g % h, i))
+        out_specs = [q_spec, lse_spec]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((b, h, sq), jnp.float32)]
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=cfg.interpret,
+        **_compiler_params(cfg),
+    )(*operands)
+    return out if return_lse else (out, None)
+
+
+def _resolve_bwd_tiles(cfg: _Config, q, sq: int, skv: int) -> tuple[int, int]:
+    """Backward (bq, bk) tiles: the explicit pins, else the measured
+    "attention_bwd" autotune key (ops-level calls thread `bwd_key`), else
+    the forward tiles.  Whatever the source, each tile is clamped to a
+    divisor of the forward-padded extent (gcd keeps the 8/128 alignment:
+    both operands are multiples of it)."""
+    bq2, bk2 = cfg.bq_bwd, cfg.bk_bwd
+    if not (bq2 and bk2):
+        if cfg.bwd_key is not None:
+            from repro.core import backends
+            bq2, bk2 = backends.get_backend("pallas").tiles(
+                "attention_bwd", cfg.bwd_key, q.dtype,
+                interpret=cfg.interpret)
+        else:
+            bq2, bk2 = cfg.bq, cfg.bk
+    if sq % bq2:
+        bq2 = math.gcd(sq, bq2)
+    if skv % bk2:
+        bk2 = math.gcd(skv, bk2)
+    return bq2, bk2
+
+
+def _backward(cfg: _Config, q, k, v, kvl, do, lse, delta):
+    b, h, sq, d = q.shape
+    _, kvh, skv, _ = k.shape
+    grp = h // kvh
+    bq, bk = _resolve_bwd_tiles(cfg, q, sq, skv)
+    has_kvl = kvl is not None
+    common = dict(bq=bq, bk=bk, sm_scale=cfg.sm_scale, causal=cfg.causal,
+                  q_offset=cfg.q_offset, q_len=cfg.q_len, has_kv_len=has_kvl)
+
+    q_spec = pl.BlockSpec((1, 1, bq, d), lambda g, i, j: (g // h, g % h, i, 0))
+    kv_spec = pl.BlockSpec((1, 1, bk, d),
+                           lambda g, i, j: (g // h, (g % h) // grp, j, 0))
+    row_spec = pl.BlockSpec((1, 1, bq), lambda g, i, j: (g // h, g % h, i))
+    in_specs = [q_spec, kv_spec, kv_spec, q_spec, row_spec, row_spec]
+    operands = [q, k, v, do, lse, delta]
+    if has_kvl:
+        in_specs.append(pl.BlockSpec((1, 1), lambda g, i, j: (g // h, 0)))
+        operands.append(kvl)
+    scratch = [pltpu.VMEM((bq, d), jnp.float32)] if pltpu is not None else []
+    nk = skv // bk
+    dq = pl.pallas_call(
+        functools.partial(_flash_bwd_dq_kernel, nk=nk, **common),
+        grid=(b * h, sq // bq, nk),
+        in_specs=in_specs,
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=scratch,
+        interpret=cfg.interpret,
+        **_compiler_params(cfg),
+    )(*operands)
+
+    # dK/dV: one program per kv-head; the innermost axis walks the G query
+    # heads of the group × the query tiles, reducing into (bk, d) scratch.
+    nq = sq // bq
+    nt = grp * nq
+    qh_spec = pl.BlockSpec(
+        (1, 1, bq, d),
+        lambda n, jk, t: (n // kvh, (n % kvh) * grp + t // nq, t % nq, 0))
+    kvh_spec = pl.BlockSpec((1, 1, bk, d),
+                            lambda n, jk, t: (n // kvh, n % kvh, jk, 0))
+    rowh_spec = pl.BlockSpec(
+        (1, 1, bq),
+        lambda n, jk, t: (n // kvh, (n % kvh) * grp + t // nq, t % nq))
+    in_specs = [qh_spec, kvh_spec, kvh_spec, qh_spec, rowh_spec, rowh_spec]
+    operands = [q, k, v, do, lse, delta]
+    if has_kvl:
+        in_specs.append(pl.BlockSpec((1, 1), lambda n, jk, t: (n // kvh, 0)))
+        operands.append(kvl)
+    scratch = []
+    if pltpu is not None:
+        scratch = [pltpu.VMEM((bk, d), jnp.float32),
+                   pltpu.VMEM((bk, d), jnp.float32)]
+    dk, dv = pl.pallas_call(
+        functools.partial(_flash_bwd_dkv_kernel, nq=nq, nt=nt, **common),
+        grid=(b * kvh, skv // bk, nt),
+        in_specs=in_specs,
+        out_specs=[kvh_spec, kvh_spec],
+        out_shape=[jax.ShapeDtypeStruct((b, kvh, skv, d), k.dtype),
+                   jax.ShapeDtypeStruct((b, kvh, skv, d), v.dtype)],
+        scratch_shapes=scratch,
+        interpret=cfg.interpret,
+        **_compiler_params(cfg),
+    )(*operands)
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash(cfg: _Config, q, k, v, kvl):
+    o, _ = _forward(cfg, q, k, v, kvl, return_lse=False)
+    return o
+
+
+def _flash_vjp_fwd(cfg: _Config, q, k, v, kvl):
+    o, lse = _forward(cfg, q, k, v, kvl, return_lse=True)
+    return o, (q, k, v, kvl, o, lse)
+
+
+def _flash_vjp_bwd(cfg: _Config, res, do):
+    q, k, v, kvl, o, lse = res
+    # Delta term: rowsum(dO ∘ O) — elementwise O(S·d), no kernel needed.
+    # Fully-masked rows have O == 0, so delta == 0 there by construction.
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+    dq, dk, dv = _backward(cfg, q, k, v, kvl, do, lse, delta)
+    # kv_len is integer-valued: its cotangent is the symbolic zero float0.
+    kvl_ct = (None if kvl is None
+              else np.zeros(kvl.shape, dtype=jax.dtypes.float0))
+    return dq, dk, dv, kvl_ct
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, sm_scale=None,
                     bq: int = 256, bk: int = 256, kv_len=None,
                     q_offset: int | None = None, q_len: int = 0,
-                    interpret: bool = True):
+                    interpret: bool = True, bq_bwd: int = 0,
+                    bk_bwd: int = 0, bwd_key: tuple | None = None):
     """q: (B, H, Sq, D); k, v: (B, KV, Skv, D) with H % KV == 0.
 
     Returns (B, H, Sq, D) in q.dtype.  Query head h attends kv-head
@@ -137,45 +497,30 @@ def flash_attention(q, k, v, *, causal: bool = True, sm_scale=None,
     prefill into a larger cache buffer keeps causality between the new
     tokens).  Fully-masked query rows (row position >= kv_len, or
     kv_len == 0) return exact 0.
+
+    DIFFERENTIABLE (``jax.custom_vjp``): the forward saves the per-row
+    logsumexp; two backward kernels compute dQ (query-tile grid) and the
+    compact grouped dK/dV (kv-tile grid, group reduction in-kernel —
+    (B, KV, Skv, D) out, no H-broadcast).  ``bq_bwd``/``bk_bwd`` pin the
+    backward tiles; 0 resolves them from the measured "attention_bwd"
+    autotune key when ``bwd_key`` (the engine-layout (q_shape, k_shape))
+    is threaded through, else reuses (bq, bk).  Backward tiles that do not
+    divide (Sq, Skv) are clamped to gcd divisors, so any MXU-aligned pick
+    is safe to pin.  Fully-masked rows produce exact-0 gradients.
+    kv_len/q_offset/q_len are gradient-transparent.
     """
     b, h, sq, d = q.shape
     _, kvh, skv, _ = k.shape
     assert sq % bq == 0 and skv % bk == 0, ((sq, skv), (bq, bk))
     assert h % kvh == 0, (h, kvh)
-    grp = h // kvh
     if sm_scale is None:
         sm_scale = 1.0 / (d ** 0.5)
     if q_offset is None:
         q_offset = skv - sq
-    grid = (b * h, sq // bq, skv // bk)
-    scratch = []
-    if pltpu is not None:
-        scratch = [pltpu.VMEM((bq, _LANES), jnp.float32),   # m
-                   pltpu.VMEM((bq, _LANES), jnp.float32),   # l
-                   pltpu.VMEM((bq, d), jnp.float32)]        # acc
-    compiler_params = None
-    if not interpret and _COMPILER_PARAMS is not None:
-        compiler_params = _COMPILER_PARAMS(
-            dimension_semantics=("parallel", "parallel", "arbitrary"))
-    kernel = functools.partial(
-        _flash_kernel, nk=grid[2], bq=bq, bk=bk, sm_scale=float(sm_scale),
-        causal=causal, q_offset=q_offset, q_len=q_len if q_len else sq,
-        has_kv_len=kv_len is not None)
-    q_spec = pl.BlockSpec((1, 1, bq, d), lambda g, i, j: (g // h, g % h, i, 0))
-    kv_spec = pl.BlockSpec((1, 1, bk, d),
-                           lambda g, i, j: (g // h, (g % h) // grp, j, 0))
-    in_specs = [q_spec, kv_spec, kv_spec]
-    operands = [q, k, v]
-    if kv_len is not None:
-        in_specs.append(pl.BlockSpec((1, 1), lambda g, i, j: (g // h, 0)))
-        operands.append(kv_len.astype(jnp.int32).reshape(b, 1))
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=in_specs,
-        out_specs=q_spec,
-        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
-        scratch_shapes=scratch,
-        interpret=interpret,
-        **({"compiler_params": compiler_params} if compiler_params else {}),
-    )(*operands)
+    kvl = (None if kv_len is None
+           else kv_len.astype(jnp.int32).reshape(b, 1))
+    cfg = _Config(causal=causal, sm_scale=float(sm_scale), bq=bq, bk=bk,
+                  bq_bwd=bq_bwd, bk_bwd=bk_bwd, q_offset=q_offset,
+                  q_len=q_len if q_len else sq, interpret=interpret,
+                  bwd_key=bwd_key)
+    return _flash(cfg, q, k, v, kvl)

@@ -146,35 +146,33 @@ def _attention_working_set(bq: int, bk: int, d: int, itemsize: int) -> int:
     return q_out + kv + scores + stats
 
 
-def default_attention_blocks(b: int, sq: int, skv: int, h: int, kv: int,
-                             d: int, dtype) -> tuple[int, int]:
-    """Heuristic (bq, bk) pick: MXU-aligned (bq multiple of 8 sublanes,
-    bk multiple of 128 lanes), clamped to the padded problem so short
-    sequences never pad past one tile, shrunk while the grouped-KV working
-    set (`_attention_working_set`) exceeds the VMEM budget."""
+def _default_seq_blocks(sq: int, skv: int, d: int, dtype, working_set,
+                        bq_start: int, bk_start: int) -> tuple[int, int]:
+    """Shared (bq, bk) heuristic walk for the forward and backward
+    attention tilings: MXU-aligned (bq multiple of 8 sublanes, bk multiple
+    of 128 lanes), clamped to the padded problem so short sequences never
+    pad past one tile, shrunk while `working_set` exceeds the VMEM
+    budget."""
     itemsize = jnp.dtype(dtype).itemsize
-    bq = min(_round_up(sq, 8), 256)
-    bk = min(_round_up(skv, 128), 512)
-    while bk > 128 and _attention_working_set(bq, bk, d,
-                                              itemsize) > _VMEM_BUDGET:
+    bq = min(_round_up(sq, 8), bq_start)
+    bk = min(_round_up(skv, 128), bk_start)
+    while bk > 128 and working_set(bq, bk, d, itemsize) > _VMEM_BUDGET:
         bk //= 2
-    while bq > 8 and _attention_working_set(bq, bk, d,
-                                            itemsize) > _VMEM_BUDGET:
+    while bq > 8 and working_set(bq, bk, d, itemsize) > _VMEM_BUDGET:
         bq = _round_up(bq // 2, 8)
     return bq, bk
 
 
-def candidate_attention_blocks(b: int, sq: int, skv: int, h: int, kv: int,
-                               d: int, dtype) -> list[tuple[int, int]]:
-    """Candidate (bq, bk) set for measured attention autotuning: the
-    heuristic pick plus its axis-wise half/double neighbors, MXU-aligned
-    (bq mult of 8, bk mult of 128), capped at the padded sequence extents
-    (a tile longer than the padded sequence only adds padding), and
-    filtered to the grouped-KV VMEM working-set budget.  Small by design,
+def _candidate_seq_blocks(sq: int, skv: int, d: int, dtype, working_set,
+                          base: tuple[int, int]) -> list[tuple[int, int]]:
+    """Shared candidate sweep around a (bq, bk) base pick: axis-wise
+    half/double neighbors, MXU-aligned, capped at the padded sequence
+    extents (a tile longer than the padded sequence only adds padding),
+    filtered to `working_set` under the VMEM budget.  Small by design,
     like `candidate_blocks`: measurement happens once per key per device.
     """
     itemsize = jnp.dtype(dtype).itemsize
-    bq, bk = base = default_attention_blocks(b, sq, skv, h, kv, d, dtype)
+    bq, bk = base
     bq_cap = min(512, _round_up(sq, 8))
     bk_cap = min(2048, _round_up(skv, 128))
     cands = [base]
@@ -183,10 +181,27 @@ def candidate_attention_blocks(b: int, sq: int, skv: int, h: int, kv: int,
                 max(128, min(_round_up(vk, 128), bk_cap)))
         if cand in cands:
             continue
-        if _attention_working_set(*cand, d, itemsize) > _VMEM_BUDGET:
+        if working_set(*cand, d, itemsize) > _VMEM_BUDGET:
             continue
         cands.append(cand)
     return cands
+
+
+def default_attention_blocks(b: int, sq: int, skv: int, h: int, kv: int,
+                             d: int, dtype) -> tuple[int, int]:
+    """Heuristic forward (bq, bk) pick under the grouped-KV working set
+    (`_attention_working_set`)."""
+    return _default_seq_blocks(sq, skv, d, dtype, _attention_working_set,
+                               256, 512)
+
+
+def candidate_attention_blocks(b: int, sq: int, skv: int, h: int, kv: int,
+                               d: int, dtype) -> list[tuple[int, int]]:
+    """Forward candidate (bq, bk) set for measured attention autotuning
+    (`_candidate_seq_blocks` around the heuristic pick)."""
+    return _candidate_seq_blocks(
+        sq, skv, d, dtype, _attention_working_set,
+        default_attention_blocks(b, sq, skv, h, kv, d, dtype))
 
 
 def attention_bench_thunk(b: int, sq: int, skv: int, h: int, kv: int,
@@ -203,6 +218,70 @@ def attention_bench_thunk(b: int, sq: int, skv: int, h: int, kv: int,
     v = jnp.zeros((b, skv, kv, d), dtype)
     return lambda: attention(q, k, v, causal=True, bq=bq, bk=bk,
                              interpret=interpret)
+
+
+# -------------------------------------------- attention backward tiles ---
+# The custom-VJP backward kernels (flash_attention.py) re-tile the same
+# padded problem with their own (bq, bk): the backward working set is
+# larger (q, dO, k, v, dK, dV tiles plus THREE fp32 score-sized tiles are
+# live per grid step), so the forward winner is usually too big.  Backward
+# tiles get their own measured key — ("attention_bwd", (q_shape, k_shape),
+# dtype, backend) — resolved lazily at backward-trace time, so inference
+# never touches (or measures) them.
+
+def _attention_bwd_working_set(bq: int, bk: int, d: int,
+                               itemsize: int) -> int:
+    """VMEM bytes for one backward grid step, grouped-KV footprint: the
+    double-buffered q/dO (query side) and k/v/dK/dV (kv side) tiles, the
+    per-row lse/delta operands, the fp32 p/dp/ds score tiles, and the
+    fp32 gradient accumulators (dQ on the dQ grid, dK+dV on the kv grid —
+    budgeted together since both kernels must fit)."""
+    q_like = 2 * 2 * bq * d * itemsize          # double-buffered q + dO
+    kv_like = 2 * 4 * bk * d * itemsize         # k, v and the dK/dV outs
+    rows = 2 * 2 * bq * 4                       # lse + delta (fp32)
+    scores = 3 * bq * bk * 4                    # p, dp, ds (fp32)
+    acc = (bq * d + 2 * bk * d) * 4             # dQ | dK/dV accumulators
+    return q_like + kv_like + rows + scores + acc
+
+
+def default_attention_bwd_blocks(b: int, sq: int, skv: int, h: int, kv: int,
+                                 d: int, dtype) -> tuple[int, int]:
+    """Heuristic backward (bq, bk): the shared walk, started smaller
+    (128, 256) and shrunk under the backward working-set formula
+    (`_attention_bwd_working_set`)."""
+    return _default_seq_blocks(sq, skv, d, dtype,
+                               _attention_bwd_working_set, 128, 256)
+
+
+def candidate_attention_bwd_blocks(b: int, sq: int, skv: int, h: int,
+                                   kv: int, d: int, dtype
+                                   ) -> list[tuple[int, int]]:
+    """Backward candidate set: the shared sweep around the backward
+    heuristic pick, filtered to the LARGER backward VMEM working set."""
+    return _candidate_seq_blocks(
+        sq, skv, d, dtype, _attention_bwd_working_set,
+        default_attention_bwd_blocks(b, sq, skv, h, kv, d, dtype))
+
+
+def attention_bwd_bench_thunk(b: int, sq: int, skv: int, h: int, kv: int,
+                              d: int, dtype, tiles: tuple[int, int], *,
+                              interpret: bool = True):
+    """Measurement unit for a backward candidate: one compiled
+    `jax.grad` of the causal grouped wrapper with the backward tiles
+    PINNED (so the timed trace never re-enters the autotune cache) and
+    the forward tiles left to the cache (identical across candidates).
+    Zero operands are fair for the same reason as the forward bench."""
+    bq2, bk2 = tiles
+    q = jnp.zeros((b, sq, h, d), dtype)
+    k = jnp.zeros((b, skv, kv, d), dtype)
+    v = jnp.zeros((b, skv, kv, d), dtype)
+
+    def loss(q, k, v):
+        return attention(q, k, v, causal=True, bq_bwd=bq2, bk_bwd=bk2,
+                         interpret=interpret).astype(jnp.float32).sum()
+
+    grad = jax.jit(jax.grad(loss, argnums=(0, 1, 2)))
+    return lambda: grad(q, k, v)
 
 
 def validate_attention_shapes(q, k, v) -> None:
@@ -254,9 +333,11 @@ def normalize_kv_len(kv_len, b: int, skv: int):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+    jax.jit, static_argnames=("causal", "bq", "bk", "bq_bwd", "bk_bwd",
+                              "interpret"))
 def attention(q, k, v, kv_len=None, sm_scale=None, *, causal: bool = True,
-              bq: int = 0, bk: int = 0, interpret: bool = True):
+              bq: int = 0, bk: int = 0, bq_bwd: int = 0, bk_bwd: int = 0,
+              interpret: bool = True):
     """Grouped flash attention on the engine, arbitrary sequence lengths.
 
     q: (B, Sq, H, D); k, v: (B, Skv, KV, D) with KV <= H, H % KV == 0 —
@@ -269,6 +350,14 @@ def attention(q, k, v, kv_len=None, sm_scale=None, *, causal: bool = True,
     queries right-align against the LIVE key extent: the real (unpadded)
     Skv, or ``kv_len`` when given (chunked prefill into a larger cache
     buffer).  Fully-masked query rows return exact 0.
+
+    DIFFERENTIABLE end-to-end: the kernel carries a custom VJP, and this
+    wrapper's pad/slice are gradient-transparent (the slice VJP zero-fills
+    padded-row cotangents; the pad VJP slices padded-key gradients off, and
+    the synthesized ``kv_len`` masks padded keys inside the backward
+    kernels too).  ``bq_bwd``/``bk_bwd`` pin the backward tiles; 0 resolves
+    them at backward-trace time from the measured ``"attention_bwd"``
+    autotune key — forward-only callers never touch that key.
     """
     validate_attention_shapes(q, k, v)
     b, sq, h, d = q.shape
@@ -295,6 +384,7 @@ def attention(q, k, v, kv_len=None, sm_scale=None, *, causal: bool = True,
         kt, vt = jnp.pad(kt, pad), jnp.pad(vt, pad)
     o = flash_kernel.flash_attention(
         qt, kt, vt, causal=causal, sm_scale=1.0, bq=bq, bk=bk,
+        bq_bwd=bq_bwd, bk_bwd=bk_bwd, bwd_key=(q.shape, k.shape),
         kv_len=kvl, q_offset=skv - sq, q_len=sq, interpret=interpret)
     return o[:, :, :sq].transpose(0, 2, 1, 3)
 

@@ -135,11 +135,11 @@ def gqa_forward(engine: ComputeEngine, p, x, cos, sin, cfg, *,
     """x: (B, S, D) -> (B, S, D).  Full-sequence (train / prefill).
 
     Off-mesh with ``kernel_attention`` (the default), attention dispatches
-    the registry `attention` op — the kernel-backed inference path.  Pass
-    ``kernel_attention=False`` on differentiated paths (training): the
-    Pallas flash kernel has no VJP, while the blockwise jnp formulation is
-    differentiable under every backend.  Under a mesh the blockwise GSPMD
-    path is always used.
+    the registry `attention` op — the kernel-backed path, for training AND
+    inference: the flash kernel carries a custom VJP, so jax.grad flows
+    through the same numerics serving runs.  ``kernel_attention=False``
+    forces the blockwise jnp formulation (the A/B baseline).  Under a mesh
+    the blockwise GSPMD path is always used.
     """
     B, S, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim

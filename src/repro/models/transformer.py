@@ -263,10 +263,13 @@ def forward_hidden(engine: ComputeEngine, cfg, params, *, tokens=None,
                    n_q_chunks: int = 8, kernel_attention: bool = True):
     """Full-sequence forward to final hidden states (B, S, D).
 
-    ``kernel_attention=False`` keeps GQA attention on the differentiable
-    blockwise formulation off-mesh (required under autodiff: the Pallas
-    flash kernel has no VJP) — loss_fn sets it; inference callers keep the
-    kernel-backed default.
+    Off-mesh, GQA attention dispatches the registry `attention` op under
+    training AND inference alike — the flash kernel carries a custom VJP
+    (kernels/flash_attention.py), so loss_fn differentiates straight
+    through the kernel path and train/serve numerics agree.
+    ``kernel_attention=False`` forces the blockwise jnp formulation (the
+    A/B baseline; under a mesh the blockwise GSPMD path engages
+    regardless).
     """
     h = _embed_inputs(engine, cfg, params, tokens, patch_embeds, frames)
     S = h.shape[1]
@@ -501,12 +504,22 @@ def decode_hidden(engine: ComputeEngine, cfg, params, caches, token, pos):
 
 def loss_fn(engine: ComputeEngine, cfg, params, batch, *,
             aux_coef: float = 0.01, remat: bool = True,
-            n_q_chunks: int = 8, ce_chunk: int = 512):
-    """Mean token CE (+ MoE aux) for a training batch."""
+            n_q_chunks: int = 8, ce_chunk: int = 512,
+            kernel_attention: bool = True):
+    """Mean token CE (+ MoE aux) for a training batch.
+
+    Runs the SAME attention implementation as serving: off-mesh the
+    registry `attention` op (flash kernel with its custom-VJP backward
+    kernels under the pallas backend), so training and inference share one
+    set of numerics.  ``kernel_attention=False`` keeps the blockwise jnp
+    formulation for A/B comparison; under a mesh the GSPMD blockwise path
+    engages regardless of the flag.
+    """
     h, aux = forward_hidden(
         engine, cfg, params, tokens=batch.get("tokens"),
         patch_embeds=batch.get("patch_embeds"), frames=batch.get("frames"),
-        remat=remat, n_q_chunks=n_q_chunks, kernel_attention=False)
+        remat=remat, n_q_chunks=n_q_chunks,
+        kernel_attention=kernel_attention)
     w_head = head_weight(params, cfg)
     ce = chunked_cross_entropy(engine, h, w_head, batch["labels"],
                                vocab_real=cfg.vocab_size, chunk=ce_chunk)

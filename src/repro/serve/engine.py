@@ -11,9 +11,9 @@ JAX-native core: one compiled program, host-side slot bookkeeping.
 Implements the shared `ServingFrontend` protocol (serve/frontend.py):
 `submit/step/run/stats` with the same stats schema as the CNN engine, so
 one serving surface covers both workloads.  Prompts longer than the KV
-cache are rejected at `submit` (or truncated with `req.truncated` set,
-under ``on_overflow="truncate"``) — they can never be served without
-silently clobbering cache rows.
+cache are rejected at `submit` with `frontend.RejectedRequest` (or
+truncated with `req.truncated` set, under ``on_overflow="truncate"``) —
+they can never be served without silently clobbering cache rows.
 """
 from __future__ import annotations
 
@@ -74,7 +74,7 @@ class ServingEngine(fe.ServingFrontend):
             # pos == max_len clamps onto the last row and corrupts it.
             if self.on_overflow == "reject":
                 self._rejected += 1
-                raise ValueError(
+                raise fe.RejectedRequest(
                     f"prompt length {len(req.prompt)} exceeds the KV cache "
                     f"(max_len={self.max_len}); shorten the prompt or build "
                     f"the engine with on_overflow='truncate'")

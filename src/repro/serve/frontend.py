@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import abc
 import dataclasses
+import math
 import time
 from collections import deque
 
@@ -39,14 +40,27 @@ REQUEST_KEYS = ("submitted", "completed", "rejected", "truncated")
 LATENCY_KEYS = ("avg", "max")
 
 
+class RejectedRequest(ValueError):
+    """An ADMISSION failure: the request itself is inadmissible (bad image
+    shape, prompt overflowing the KV cache) and was counted as rejected.
+
+    Engines raise this — and only this — from `submit`'s admission checks,
+    so `run` can skip a rejected request and keep serving the batch while
+    any other ValueError (a genuine programming error: mis-shaped engine
+    state, a corrupt cache) propagates instead of being silently
+    swallowed as a "rejection"."""
+
+
 @dataclasses.dataclass
 class Request:
     """Base serving request: identity, lifecycle, latency timestamps.
 
     Engines set `t_submit` at admission to the frontend and `t_done` at
-    completion; `latency_s` is the queueing + execution time in between.
-    Lifecycle fields are keyword-only so subclass payload fields (prompt,
-    image, ...) keep their positional slots right after `rid`.
+    completion; `latency_s` is the queueing + execution time in between —
+    NaN until the request completes (rejected and in-flight requests keep
+    NaN timestamps, which is why `LatencyAgg` refuses them).  Lifecycle
+    fields are keyword-only so subclass payload fields (prompt, image,
+    ...) keep their positional slots right after `rid`.
     """
     rid: int
     done: bool = dataclasses.field(default=False, kw_only=True)
@@ -73,10 +87,12 @@ class ServingFrontend(abc.ABC):
     `step()` returns the number of requests it advanced (0 = fully idle),
     so `run` is engine-agnostic: submit everything, step until idle.
 
-    `submit` raises ValueError on an inadmissible request (bad image shape,
-    prompt overflowing the KV cache); `run` catches that per request —
-    rejections are counted in `stats()` and the request stays `done=False`
-    — so one bad request cannot strand the rest of a batch.
+    `submit` raises `RejectedRequest` on an inadmissible request (bad
+    image shape, prompt overflowing the KV cache); `run` catches exactly
+    that per request — rejections are counted in `stats()` and the request
+    stays `done=False` — so one bad request cannot strand the rest of a
+    batch, while any OTHER exception (a genuine programming error)
+    propagates.
     """
 
     @abc.abstractmethod
@@ -95,7 +111,7 @@ class ServingFrontend(abc.ABC):
         for r in requests:
             try:
                 self.submit(r)
-            except ValueError:
+            except RejectedRequest:
                 pass  # rejected: counted in stats, left not-done
         for _ in range(max_steps):
             if self.step() == 0:
@@ -105,7 +121,13 @@ class ServingFrontend(abc.ABC):
 
 class LatencyAgg:
     """Running per-request latency aggregate (sum/max/count) — O(1) state
-    for long-running servers, no per-request history kept."""
+    for long-running servers, no per-request history kept.
+
+    Aggregates COMPLETED requests only: a rejected or in-flight request
+    has `t_done = NaN`, so its `latency_s` is NaN and one such sample
+    would poison `avg`/`max` for the server's whole lifetime (`max(x,
+    nan)` and the running sum never recover).  `add` therefore rejects
+    non-finite samples loudly instead of absorbing them."""
 
     def __init__(self):
         self.sum = 0.0
@@ -113,6 +135,11 @@ class LatencyAgg:
         self.count = 0
 
     def add(self, latency_s: float) -> None:
+        if not math.isfinite(latency_s):
+            raise ValueError(
+                f"non-finite latency sample {latency_s!r}: only COMPLETED "
+                "requests (t_submit and t_done set) may be aggregated — "
+                "rejected or in-flight requests have NaN timestamps")
         self.sum += latency_s
         self.max = max(self.max, latency_s)
         self.count += 1
@@ -167,12 +194,13 @@ class CNNServingEngine(ServingFrontend):
         try:
             img = np.asarray(req.image)
         except (ValueError, TypeError) as e:
-            self._rejected += 1  # count before raising: run() swallows it
-            raise ValueError(f"bad image payload: {e}") from e
+            self._rejected += 1  # count before raising: run() skips it
+            raise RejectedRequest(f"bad image payload: {e}") from e
         if tuple(img.shape) != self.in_shape:
             self._rejected += 1
-            raise ValueError(f"image shape {tuple(img.shape)} != network "
-                             f"input {self.in_shape}")
+            raise RejectedRequest(
+                f"image shape {tuple(img.shape)} != network "
+                f"input {self.in_shape}")
         req.image = img.astype(self.cache.dtype, copy=False)
         req.t_submit = time.perf_counter()
         self.pending.append(req)

@@ -21,7 +21,8 @@ def make_prefill_step(engine: ComputeEngine, cfg, *, n_q_chunks: int = 8,
     K/V — the same layout the caches (serve/kvcache.py) store, so no
     H-broadcast exists anywhere between projection and cache.
     ``kernel_attention=False`` forces the blockwise jnp formulation (the
-    differentiable path; prefill itself never needs it)."""
+    A/B baseline; the op path is differentiable too, via the flash
+    kernel's custom VJP)."""
     def prefill_step(params, inputs):
         h, caches = tfm.forward_prefill(
             engine, cfg, params, tokens=inputs.get("tokens"),

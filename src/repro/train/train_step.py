@@ -23,12 +23,20 @@ from repro.train.compression import ef_compress_tree
 def make_train_step(engine: ComputeEngine, cfg, ocfg: opt.AdamWConfig, *,
                     num_microbatches: int = 1, remat: bool = True,
                     n_q_chunks: int = 8, ce_chunk: int = 512,
-                    grad_compression: bool = False):
-    """Returns train_step(params, opt_state, batch[, err]) -> ..."""
+                    grad_compression: bool = False,
+                    kernel_attention: bool = True):
+    """Returns train_step(params, opt_state, batch[, err]) -> ...
+
+    Off-mesh the differentiated trace dispatches the registry `attention`
+    op (the kernel-backed serving path — the flash kernel has a custom
+    VJP); ``kernel_attention=False`` pins the blockwise jnp formulation
+    for A/B benchmarking.
+    """
 
     def loss(p, mb):
         return tfm.loss_fn(engine, cfg, p, mb, remat=remat,
-                           n_q_chunks=n_q_chunks, ce_chunk=ce_chunk)
+                           n_q_chunks=n_q_chunks, ce_chunk=ce_chunk,
+                           kernel_attention=kernel_attention)
 
     def grads_of(params, batch):
         if num_microbatches == 1:

@@ -15,7 +15,14 @@ broadcast.  This suite pins that contract across all three backends
   * clear ValueErrors at dispatch for bad head ratios / dtype mismatches;
   * a trace-level regression: the prefill jaxpr contains NO H-broadcast of
     K/V — the KV operand stays (B, S, KV, hd) end-to-end, so the old
-    ``jnp.repeat`` can never silently return.
+    ``jnp.repeat`` can never silently return;
+  * GRADIENT conformance (the op is differentiable on every backend — the
+    flash kernel carries a custom VJP): jax.grad of the kernel path vs the
+    blockwise-jnp formulation and the ref oracle over the shipped head
+    ratios, odd lengths, causal + kv_len, fp32 tight / bf16 loose, a
+    jax.checkpoint(remat) compatibility check mirroring train_step, the
+    backward fully-masked-row exact-0 guarantee, and a backward-trace
+    no-H-broadcast regression (dK/dV stay compact (B, Skv, KV, hd)).
 """
 import jax
 import jax.numpy as jnp
@@ -138,6 +145,224 @@ def test_causal_kv_len_chunked_prefill(backend):
     noncausal = ref.flash_attention_ref(q, k[:, :4], v[:, :4], causal=False)
     assert not np.allclose(np.asarray(got4), np.asarray(noncausal),
                            rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------ gradient conformance ---
+# The registry op is differentiable on every backend: ref/xla are plain
+# jnp, and the pallas flash kernel carries a custom VJP whose backward
+# kernels must agree with the oracles to fp32 tightness — training rides
+# the same kernel path as serving (no more kernel_attention=False).
+
+GRAD_TOL = {jnp.float32: 1e-5, jnp.bfloat16: 3e-2}
+
+
+def _grads(eng_or_fn, q, k, v, w, *, causal=True, kv_len=None):
+    """(dq, dk, dv) of sum(attention(q, k, v) * w) — a fixed random
+    cotangent, so every output element influences the gradients."""
+    def loss(q, k, v):
+        if callable(eng_or_fn):
+            out = eng_or_fn(q, k, v)
+        else:
+            out = eng_or_fn.attention(q, k, v, causal=causal, kv_len=kv_len)
+        return jnp.sum(out.astype(jnp.float32) * w)
+    return jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+
+
+def _assert_grads_close(got, want, dtype, tol=None):
+    tol = tol or GRAD_TOL[dtype]
+    for name, a, b in zip("qkv", got, want):
+        a = np.asarray(a, np.float32)
+        b = np.asarray(b, np.float32)
+        assert np.all(np.isfinite(a)), f"d{name} has non-finite entries"
+        denom = np.abs(b).max() + 1e-12
+        rel = np.abs(a - b).max() / denom
+        assert rel <= tol, f"d{name}: rel err {rel:.3e} > {tol:.1e}"
+
+
+@pytest.mark.parametrize("h,kv", HEAD_RATIOS)
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("backend", ("pallas", "xla"))
+def test_grad_parity_odd_seq(h, kv, causal, backend):
+    """Odd S=33 differentiates through the padded kernel path: padded-row
+    cotangents must be sliced/zeroed exactly and padded-key gradients must
+    never leak into dK/dV."""
+    q, k, v = _mk(h * 13 + kv, 1, 33, 33, h, kv, 16)
+    w = jax.random.normal(jax.random.PRNGKey(99), q.shape, jnp.float32)
+    got = _grads(make_engine(backend), q, k, v, w, causal=causal)
+    want = _grads(make_engine("ref"), q, k, v, w, causal=causal)
+    _assert_grads_close(got, want, jnp.float32)
+
+
+@pytest.mark.parametrize("h,kv", HEAD_RATIOS)
+def test_grad_parity_kernel_vs_blockwise(h, kv):
+    """The acceptance criterion: the kernel path's gradients match the
+    retired blockwise-jnp training fallback to <= 1e-5 relative error in
+    fp32 on every shipped head ratio."""
+    from repro.models.attention import blockwise_attention
+    B, S, d = 2, 32, 16
+    q, k, v = _mk(h * 7 + kv, B, S, S, h, kv, d)
+    w = jax.random.normal(jax.random.PRNGKey(5), q.shape, jnp.float32)
+    got = _grads(make_engine("pallas"), q, k, v, w, causal=True)
+    xla = make_engine("xla")
+
+    def blockwise(q, k, v):
+        qg = q.reshape(B, S, kv, h // kv, d)
+        y = blockwise_attention(xla, qg, k, v, causal=True, n_q_chunks=4)
+        return y.reshape(B, S, h, d)
+
+    want = _grads(blockwise, q, k, v, w)
+    _assert_grads_close(got, want, jnp.float32)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("backend", ("pallas", "xla"))
+def test_grad_dtype_tiers(dtype, backend):
+    q, k, v = _mk(21, 1, 64, 64, 8, 2, 32, dtype)
+    w = jax.random.normal(jax.random.PRNGKey(4), q.shape, jnp.float32)
+    q32, k32, v32 = (x.astype(jnp.float32) for x in (q, k, v))
+    got = _grads(make_engine(backend), q, k, v, w, causal=True)
+    want = _grads(make_engine("ref"), q32, k32, v32, w, causal=True)
+    _assert_grads_close(got, want, dtype)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_grad_causal_kv_len_chunked_prefill(backend):
+    """causal + kv_len (chunked prefill into a larger cache buffer):
+    gradients against the live prefix match differentiating plain causal
+    attention over that prefix — for both the kv_len == Sq and the
+    continuation (kv_len > Sq) cases."""
+    q, k, v = _mk(23, 2, 4, 8, 8, 2, 16)
+    w = jax.random.normal(jax.random.PRNGKey(3), q.shape, jnp.float32)
+    eng = make_engine(backend)
+    for kvl in (4, 6):
+        got = _grads(eng, q, k, v, w, causal=True, kv_len=jnp.int32(kvl))
+
+        def prefix(q, k, v, kvl=kvl):
+            return ref.flash_attention_ref(q, k[:, :kvl], v[:, :kvl],
+                                           causal=True)
+
+        want = _grads(prefix, q, k, v, w)
+        _assert_grads_close(got[:1], want[:1], jnp.float32)   # dq
+        for a, b in zip(got[1:], want[1:]):                   # dk, dv
+            a, b = np.asarray(a), np.asarray(b)
+            np.testing.assert_allclose(a[:, :kvl], b[:, :kvl],
+                                       rtol=1e-5, atol=1e-5)
+            # keys beyond the live extent receive exactly zero gradient
+            assert np.all(a[:, kvl:] == 0.0)
+
+
+@pytest.mark.parametrize("backend", ("pallas", "xla"))
+def test_grad_remat_compatible(backend):
+    """jax.checkpoint over the op (train_step's remat path re-runs the
+    custom-VJP forward to rebuild residuals) gives identical gradients."""
+    q, k, v = _mk(27, 1, 32, 32, 4, 2, 16)
+    w = jax.random.normal(jax.random.PRNGKey(8), q.shape, jnp.float32)
+    eng = make_engine(backend)
+
+    def attn(q, k, v):
+        return eng.attention(q, k, v, causal=True)
+
+    plain = _grads(attn, q, k, v, w)
+    remat = _grads(jax.checkpoint(attn), q, k, v, w)
+    for a, b in zip(plain, remat):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backward_fully_masked_rows_zero_not_nan(backend):
+    """The PR 4 exact-0 guarantee must hold in the BACKWARD too: a row
+    with kv_len == 0 (or fully causal-masked) produces exact-0 dQ/dK/dV —
+    not NaN from the 0·logsumexp delta term."""
+    q, k, v = _mk(31, 2, 4, 8, 4, 2, 16)
+    w = jax.random.normal(jax.random.PRNGKey(6), q.shape, jnp.float32)
+    eng = make_engine(backend)
+    dq, dk, dv = _grads(eng, q, k, v, w, causal=False,
+                        kv_len=jnp.array([0, 3], jnp.int32))
+    for g in (dq, dk, dv):
+        assert np.all(np.isfinite(np.asarray(g)))
+    assert np.all(np.asarray(dq)[0] == 0.0)      # empty slot: dead queries
+    assert np.all(np.asarray(dk)[0] == 0.0)      # ...and dead keys
+    assert np.all(np.asarray(dv)[0] == 0.0)
+    assert np.any(np.asarray(dq)[1] != 0.0)      # the live row still flows
+    # causal with kv_len < Sq: the early (right-aligned to negative
+    # positions) query rows are fully masked — exact-0 dq rows, finite all
+    # around, and the live tail matches the prefix oracle's gradients.
+    dq, dk, dv = _grads(eng, q, k, v, w, causal=True, kv_len=jnp.int32(2))
+    for g in (dq, dk, dv):
+        assert np.all(np.isfinite(np.asarray(g)))
+    assert np.all(np.asarray(dq)[:, :2] == 0.0)
+
+    def live(q, k, v):
+        return ref.flash_attention_ref(q[:, 2:], k[:, :2], v[:, :2],
+                                       causal=True)
+
+    want = _grads(live, q, k, v, w[:, 2:])
+    np.testing.assert_allclose(np.asarray(dq)[:, 2:],
+                               np.asarray(want[0])[:, 2:],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_grad_through_nondifferentiable_op_raises_clearly():
+    """A backend that does not declare an op differentiable turns a
+    differentiated dispatch into an actionable NotImplementedError — not
+    pallas_call's bare AssertionError (what VJP-less kernels die with)."""
+    xla = backends.get_backend("xla")
+    register_backend("no-grad-attn", dict(xla.ops), differentiable=(),
+                     overwrite=True)
+    try:
+        eng = make_engine("no-grad-attn")
+        q, k, v = _mk(1, 1, 8, 8, 4, 2, 8)
+        with pytest.raises(NotImplementedError,
+                           match="'attention' on backend 'no-grad-attn'"):
+            jax.grad(lambda q: eng.attention(q, k, v).sum())(q)
+        # forward-only dispatch is untouched by the guard
+        out = eng.attention(q, k, v)
+        want = make_engine("xla").attention(q, k, v)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+    finally:
+        backends.unregister_backend("no-grad-attn")
+
+
+def test_backward_trace_has_no_kv_h_broadcast():
+    """The PR 4 layout contract, extended to the backward: the grad trace
+    of the kernel path computes dK/dV in the compact KV-head layout — the
+    group reduction happens inside the dK/dV kernel, so no equation
+    anywhere in the backward jaxpr expands a KV-shaped operand to H heads
+    (in either the engine (B, S, heads, d) or kernel (B, heads, S, d)
+    axis order)."""
+    B, S, H, KV, hd = 2, 32, 4, 2, 16
+    G = H // KV
+    eng = make_engine("pallas")
+    q, k, v = _mk(37, B, S, S, H, KV, hd)
+    w = jax.random.normal(jax.random.PRNGKey(2), q.shape, jnp.float32)
+
+    def loss(q, k, v):
+        return jnp.sum(eng.attention(q, k, v, causal=True) * w)
+
+    closed = jax.make_jaxpr(jax.grad(loss, argnums=(0, 1, 2)))(q, k, v)
+    suspects = {(B, S, KV, hd), (B, KV, S, hd),
+                (B, S, KV, 1, hd), (B, S, KV, G, hd), (B, KV, G, S, hd)}
+    expanded = {(B, S, H, hd), (B, H, S, hd),
+                (B, S, KV, G, hd), (B, KV, G, S, hd)}
+    flagged = []
+    for eqn in _walk_eqns(closed.jaxpr):
+        if _has_subjaxpr(eqn):
+            continue
+        ins = {tuple(getattr(a.aval, "shape", ())) for a in eqn.invars
+               if hasattr(a, "aval")}
+        outs = {tuple(getattr(o.aval, "shape", ())) for o in eqn.outvars}
+        if (ins & suspects) and (outs & expanded) and not (ins & expanded):
+            flagged.append(eqn)
+    assert not flagged, (
+        "backward trace materializes an H-broadcast of K/V:\n"
+        + "\n".join(str(e) for e in flagged))
+    # the fingerprint detects the expansion the compact layout avoids
+    bad = jax.make_jaxpr(lambda k: jnp.repeat(k, G, axis=2))(
+        jnp.zeros((B, S, KV, hd)))
+    hits = [e for e in _walk_eqns(bad.jaxpr)
+            if {tuple(o.aval.shape) for o in e.outvars} & expanded]
+    assert hits
 
 
 @pytest.mark.parametrize("backend", BACKENDS)

@@ -56,6 +56,10 @@ def isolated_autotune(tmp_path, monkeypatch):
     monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path))
     backends.clear_tile_cache()
     autotune.reset()
+    # Tile resolution happens at trace time; a jit-cache hit from an
+    # earlier test would skip it entirely (the backward keys resolve
+    # inside the custom-VJP backward trace), so start each test cold.
+    jax.clear_caches()
     prev = backends.get_autotune_policy()
     yield tmp_path
     backends.set_autotune_policy(prev)
@@ -353,6 +357,95 @@ def test_attention_persisted_roundtrip_zero_retiming(monkeypatch):
     assert st["measured"] == 0 and st["persisted"] == 1
     got = backends.autotune_report()[key]
     assert got["pick"] == rec["pick"] and got["source"] == "persisted"
+
+
+def _attention_grad(b=1, sq=64, skv=64, h=4, kv=2, d=16):
+    eng = make_engine("pallas")
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, skv, kv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, skv, kv, d), jnp.float32)
+    return jax.grad(lambda q: eng.attention(q, k, v, causal=True).sum())(q)
+
+
+def test_attention_bwd_candidates_mxu_aligned_and_vmem_filtered():
+    """Backward (bq, bk) candidates: same alignment/caps as the forward
+    set, filtered against the LARGER backward working set (q/dO + k/v/dK/dV
+    tiles + three fp32 score tiles live per step)."""
+    for dims in [(1, 256, 256, 8, 2, 64),
+                 (2, 33, 33, 14, 2, 64),
+                 (1, 4096, 4096, 16, 16, 128)]:
+        base = kernel_ops.default_attention_bwd_blocks(*dims, "float32")
+        cands = kernel_ops.candidate_attention_bwd_blocks(*dims, "float32")
+        assert cands[0] == base
+        assert len(cands) == len(set(cands)) >= 1
+        _, sq, skv, _, _, d = dims
+        for bq, bk in cands:
+            assert bq % 8 == 0 and bk % 128 == 0
+            assert bq <= max(512, kernel_ops._round_up(sq, 8))
+            assert kernel_ops._attention_bwd_working_set(
+                bq, bk, d, 4) <= kernel_ops._VMEM_BUDGET
+        # the backward working set really is bigger than the forward's
+        assert kernel_ops._attention_bwd_working_set(*base, d, 4) > \
+            kernel_ops._attention_working_set(*base, d, 4)
+
+
+def test_attention_bwd_key_measured_only_under_grad():
+    """Inference never touches the backward key space: a forward-only
+    dispatch resolves just the "attention" key; differentiating the same
+    problem adds (and measures) the "attention_bwd" key."""
+    backends.set_autotune_policy("measure")
+    _attention()
+    assert not [k for k in backends.autotune_report()
+                if k.startswith('["attention_bwd"')]
+    _attention_grad()
+    bwd = {k: r for k, r in backends.autotune_report().items()
+           if k.startswith('["attention_bwd"')}
+    assert len(bwd) == 1
+    (key, rec), = bwd.items()
+    assert rec["source"] == "measured"
+    assert len(tuple(rec["pick"])) == 2
+    assert tuple(rec["pick"]) in {tuple(c) for c, _ in
+                                  rec["candidates_timed"]}
+    with open(autotune.table_path()) as f:
+        assert key in json.load(f)["entries"]
+
+
+def test_attention_bwd_persisted_roundtrip_zero_retiming(monkeypatch):
+    """A fresh process serves the backward pick from the per-device table
+    with zero measurements — the --check-persisted property, for the
+    backward key space."""
+    backends.set_autotune_policy("measure")
+    _attention_grad()
+    rep = {k: r for k, r in backends.autotune_report().items()
+           if k.startswith('["attention_bwd"')}
+    (key, rec), = rep.items()
+
+    _fresh_process()
+    jax.clear_caches()           # a fresh process also has no jit cache
+
+    def _no_timing(*a, **kw):
+        raise AssertionError("re-timed a persisted attention_bwd pick")
+    monkeypatch.setattr(autotune, "time_thunk", _no_timing)
+
+    _attention_grad()
+    st = backends.cache_stats()
+    assert st["measured"] == 0 and st["persisted"] == 2  # fwd + bwd keys
+    got = backends.autotune_report()[key]
+    assert got["pick"] == rec["pick"] and got["source"] == "persisted"
+
+
+def test_attention_bwd_measured_pick_matches_heuristic_numerics():
+    """Backward tiling only changes the schedule: gradients under the
+    measured pick equal gradients under the heuristic pick."""
+    backends.set_autotune_policy("heuristic")
+    want = _attention_grad(sq=33, skv=33)
+    backends.clear_tile_cache()
+    jax.clear_caches()
+    backends.set_autotune_policy("measure")
+    got = _attention_grad(sq=33, skv=33)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
 
 
 def test_attention_measured_pick_matches_heuristic_numerics():

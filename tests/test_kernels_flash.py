@@ -89,6 +89,72 @@ def test_flash_kv_len_masks_keys_per_batch():
                                rtol=2e-5, atol=2e-5)
 
 
+def _grads(fn, q, k, v, w):
+    loss = lambda q, k, v: jnp.sum(fn(q, k, v).astype(jnp.float32) * w)
+    return jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+
+
+def test_flash_grad_matches_oracle_grouped():
+    """The custom-VJP backward kernels (dQ + grouped dK/dV) agree with
+    differentiating the oracle, GQA ratio included — and dK/dV come out in
+    the COMPACT (B, KV, Skv, D) layout (the group reduction runs inside
+    the kv-grid kernel, never as an H-broadcast)."""
+    b, sq, skv, h, kv, d = 1, 128, 256, 6, 2, 32
+    q, k, v = _mk(jax.random.PRNGKey(11), b, sq, skv, h, kv, d, jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(12), (b, sq, h, d), jnp.float32)
+    ql, kl, vl, wl = map(_kernel_layout, (q, k, v, w))
+    got = _grads(lambda q, k, v: flash_attention(q, k, v, causal=True,
+                                                 bq=64, bk=128,
+                                                 interpret=True),
+                 ql, kl, vl, wl)
+    want = _grads(lambda q, k, v: ref.flash_attention_ref(q, k, v,
+                                                          causal=True),
+                  q, k, v, w)
+    assert got[1].shape == (b, kv, skv, d)          # compact grouped dK
+    assert got[2].shape == (b, kv, skv, d)
+    for a, bb in zip(got, map(_kernel_layout, want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(bb),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_flash_grad_block_shape_independence():
+    """Gradients must not depend on the backward (bq, bk) tiling; tiles
+    that do not divide the sequence are gcd-clamped, not an error."""
+    q, k, v = _mk(jax.random.PRNGKey(13), 1, 128, 128, 4, 2, 32,
+                  jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(14), (1, 128, 4, 32),
+                          jnp.float32)
+    ql, kl, vl, wl = map(_kernel_layout, (q, k, v, w))
+    grads = [
+        _grads(lambda q, k, v: flash_attention(
+            q, k, v, bq=64, bk=128, bq_bwd=bq2, bk_bwd=bk2,
+            interpret=True), ql, kl, vl, wl)
+        for bq2, bk2 in [(64, 128), (128, 128), (8, 128), (48, 384)]]
+    for other in grads[1:]:
+        for a, bb in zip(grads[0], other):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(bb),
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_flash_grad_kv_len_masks_key_gradients():
+    """Keys at/beyond kv_len receive exact-0 dK/dV, and a kv_len == 0 row
+    yields exact-0 gradients everywhere (never NaN from the masked-row
+    logsumexp residual)."""
+    b, s, h, kv, d = 2, 128, 4, 2, 32
+    q, k, v = _mk(jax.random.PRNGKey(15), b, s, s, h, kv, d, jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(16), (b, s, h, d), jnp.float32)
+    kvl = jnp.array([0, 37], jnp.int32).reshape(b, 1)
+    dq, dk, dv = _grads(
+        lambda q, k, v: flash_attention(q, k, v, causal=False, bq=64,
+                                        bk=64, kv_len=kvl, interpret=True),
+        *map(_kernel_layout, (q, k, v)), _kernel_layout(w))
+    for g in (dq, dk, dv):
+        assert np.all(np.isfinite(np.asarray(g)))
+        assert np.all(np.asarray(g)[0] == 0.0)       # kv_len == 0 row
+    assert np.all(np.asarray(dk)[1, :, 37:] == 0.0)  # masked keys
+    assert np.any(np.asarray(dk)[1, :, :37] != 0.0)
+
+
 def test_flash_q_offset_keeps_diagonal_on_padded_keys():
     """With keys padded past the real Skv, an explicit q_offset pins the
     causal diagonal to the REAL lengths and kv_len masks the padding —

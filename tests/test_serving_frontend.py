@@ -99,6 +99,67 @@ def test_run_serves_past_a_rejected_request():
     assert st["requests"]["completed"] == 2
 
 
+def test_stats_latency_stays_finite_with_rejections_in_the_batch():
+    """Regression: latency aggregates cover COMPLETED requests only.  A
+    rejected (or still in-flight) request has NaN timestamps — one NaN
+    sample in the running aggregate would poison avg/max for the server's
+    whole lifetime."""
+    _, _, eng = _cnn_engine()
+    good = [fe.ImageRequest(rid=i, image=im)
+            for i, im in enumerate(_images(3))]
+    bad = fe.ImageRequest(rid=9, image=np.zeros((8, 8, 3), np.float32))
+    eng.run([bad, *good])
+    assert np.isnan(bad.latency_s)          # rejected: NaN - NaN
+    st = eng.stats()
+    assert np.isfinite(st["latency_s"]["avg"])
+    assert np.isfinite(st["latency_s"]["max"])
+    assert st["latency_s"]["max"] >= st["latency_s"]["avg"] > 0.0
+    assert eng._latency.count == 3          # the completed requests only
+
+
+def test_latency_agg_refuses_nonfinite_samples():
+    """The aggregate guards itself: feeding it an incomplete request's NaN
+    latency is a programming error, not a sample."""
+    agg = fe.LatencyAgg()
+    agg.add(0.25)
+    with pytest.raises(ValueError, match="COMPLETED"):
+        agg.add(float("nan"))
+    with pytest.raises(ValueError, match="COMPLETED"):
+        agg.add(fe.Request(rid=0).latency_s)   # never submitted/completed
+    assert (agg.count, agg.sum, agg.max) == (1, 0.25, 0.25)
+
+
+def test_rejection_is_a_dedicated_exception_type():
+    """Admission failures raise RejectedRequest (a ValueError subclass, so
+    existing callers keep working) on both engines."""
+    _, _, cnn = _cnn_engine()
+    with pytest.raises(fe.RejectedRequest, match="image shape"):
+        cnn.submit(fe.ImageRequest(rid=0, image=np.zeros((8, 8, 3),
+                                                         np.float32)))
+    assert issubclass(fe.RejectedRequest, ValueError)
+
+    cfg = reduced(get_arch("qwen2-0.5b"))
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    lm = ServingEngine(cfg, params, engine=ENGINE, slots=1, max_len=8)
+    with pytest.raises(fe.RejectedRequest, match="exceeds the KV cache"):
+        lm.submit(LMRequest(rid=0, prompt=list(range(9)), max_new=1))
+
+
+def test_run_does_not_swallow_genuine_programming_errors():
+    """`run` catches exactly RejectedRequest: a submit that dies with any
+    other ValueError (mis-shaped engine state, a corrupted queue — here: a
+    broken override) must propagate, not masquerade as a rejection."""
+    _, _, eng = _cnn_engine()
+
+    class Broken(type(eng)):
+        def submit(self, req):
+            raise ValueError("mis-shaped engine state")
+
+    eng.__class__ = Broken
+    with pytest.raises(ValueError, match="mis-shaped engine state"):
+        eng.run([fe.ImageRequest(rid=0, image=_images(1)[0])])
+
+
 def test_request_positional_construction_keeps_payload_slots():
     """Lifecycle fields on the shared base are keyword-only, so positional
     construction binds the payload right after rid (the pre-refactor LM
