@@ -142,9 +142,9 @@ def gqa_prefill_headtohead(*, B=2, S=256, n_layers=2, reps=3
     mem = (f" peak_temp_delta={(mem_b - mem_g) / 1e6:.2f}MB"
            if mem_g is not None and mem_b is not None else "")
     rows = [
-        (f"lm_step/gqa_prefill_grouped", t_g * 1e6,
+        ("lm_step/gqa_prefill_grouped", t_g * 1e6,
          f"B={B} S={S} H=8 KV=1 kv_bytes={compact / 1e6:.2f}MB"),
-        (f"lm_step/gqa_prefill_broadcast", t_b * 1e6,
+        ("lm_step/gqa_prefill_broadcast", t_b * 1e6,
          f"B={B} S={S} H=8 KV=8(broadcast) kv_bytes={broad / 1e6:.2f}MB"
          f" grouped_speedup={t_b / t_g:.2f}x"
          f" kv_bytes_saved={(broad - compact) / 1e6:.2f}MB{mem}"),

@@ -15,8 +15,7 @@ from repro.configs.base import get_arch, reduced
 from repro.core import make_engine
 from repro.models import transformer as tfm
 from repro.serve import kvcache
-from repro.serve.serve_step import (greedy_sample, make_decode_step,
-                                    make_prefill_step)
+from repro.serve.serve_step import greedy_sample, make_decode_step
 
 
 def main():
@@ -56,7 +55,7 @@ def main():
     print(f"[serve_lm] batch={B} prompt={S_prompt} generated={gen}")
     print(f"[serve_lm] prefill: {t_prefill:.2f}s  "
           f"decode: {t_decode/gen*1000:.1f} ms/token/batch")
-    print(f"[serve_lm] sample generations (token ids):")
+    print("[serve_lm] sample generations (token ids):")
     for b in range(B):
         print(f"  req{b}: {list(map(int, gen_ids[b]))[:12]}")
 

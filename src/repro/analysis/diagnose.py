@@ -65,10 +65,10 @@ def print_report(text: str, top: int = 15):
     t = rep["totals"]
     print(f"flops={t['flops']:.3e}  bytes={t['bytes']:.3e}  "
           f"coll={t['collectives']['total']:.3e}")
-    print(f"\n-- top collectives (bytes x trips) --")
+    print("\n-- top collectives (bytes x trips) --")
     for size, kind, mult, label in rep["collectives"]:
         print(f"{size:12.3e} {kind:20s} x{int(mult):<5d} {label[:100]}")
-    print(f"\n-- top memory traffic --")
+    print("\n-- top memory traffic --")
     for size, kind, mult, label in rep["traffic"]:
         print(f"{size:12.3e} {kind:20s} x{int(mult):<5d} {label[:100]}")
 

@@ -25,7 +25,6 @@ Hardware constants per the harness: 197 TFLOP/s bf16; 819 GB/s HBM;
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
 
 HW = {

@@ -1,0 +1,123 @@
+"""R001 no-head-broadcast: no equation expands KV-shaped K/V toward H
+query heads.
+
+Generalizes the PR 4/5 jaxpr fingerprint from tests/test_attention_op.py:
+the grouped-KV layout contract says the compact (B, S, KV, hd) K/V operand
+reaches the kernel unexpanded (query head h attends kv-head h // (H//KV)
+inside the kernel), so a reintroduced ``jnp.repeat(k, G, axis=2)`` — which
+lowers to a broadcast_in_dim into (B, S, KV, G, hd) plus a reshape — must
+never appear in a compiled trace, forward or backward, in either the
+engine (B, S, heads, hd) or the kernel (B, heads, S, hd) axis order.
+
+Head geometry (H, KV, head_dim) comes from the context's attention
+dispatch records (and/or explicit `head_hints`); networks without grouped
+attention (G < 2, or no attention at all) produce no findings.
+"""
+from repro.analysis import lint
+
+RULE_ID = "R001"
+SEVERITY = "error"
+
+
+def _is_suspect(s: tuple, kv: int, hd: int) -> bool:
+    """Shapes a compact KV operand takes: (…, KV, …, hd) in the engine
+    order (B, S, KV, hd), the kernel order (B, KV, S, hd), or a
+    G-insertion staging form with a singleton group axis right of KV."""
+    if not s or s[-1] != hd:
+        return False
+    if len(s) == 4:
+        return s[1] == kv or s[2] == kv
+    if len(s) == 5:
+        return (s[2] == kv and s[3] == 1) or (s[1] == kv and s[2] == 1)
+    return False
+
+
+def _is_expanded(s: tuple, h: int, kv: int, g: int, hd: int) -> bool:
+    """Shapes an H-expanded operand takes: H on the head axis of either
+    order, or the (…, KV, G, …, hd) broadcast intermediate."""
+    if not s or s[-1] != hd:
+        return False
+    if len(s) == 4:
+        return s[1] == h or s[2] == h
+    if len(s) == 5:
+        return (s[2] == kv and s[3] == g) or (s[1] == kv and s[2] == g)
+    return False
+
+
+def _expands(si: tuple, so: tuple, h: int, kv: int, g: int, hd: int) -> bool:
+    """Whether an (input shape, output shape) pair is one materialization
+    step of the KV -> H expansion:
+
+      * same rank, exactly one axis differing, KV -> H (the repeat's final
+        shape, or a gather/tile doing it in one step);
+      * same rank, a singleton group axis right of KV growing 1 -> G;
+      * rank+1 with a G axis inserted right of KV (broadcast_in_dim).
+    """
+    if not si or not so or si[-1] != hd or so[-1] != hd:
+        return False
+    if len(si) == len(so):
+        diff = [i for i in range(len(si)) if si[i] != so[i]]
+        if len(diff) != 1:
+            return False
+        i = diff[0]
+        if si[i] == kv and so[i] == h:
+            return True
+        return si[i] == 1 and so[i] == g and i > 0 and si[i - 1] == kv
+    if len(so) == len(si) + 1:
+        for i in range(1, len(so) - 1):
+            if (so[i] == g and so[i - 1] == kv
+                    and so[:i] + so[i + 1:] == si):
+                return True
+    return False
+
+
+def find_head_broadcasts(jaxpr, h: int, kv: int, hd: int) -> list:
+    """LEAF equations of `jaxpr` (recursively) that materialize a KV -> H
+    head expansion for the (h, kv, hd) geometry.  Returns [(eqn, scope)].
+
+    Call-like equations (pjit, scan, pallas_call) aggregate a whole body's
+    input->output and are recursed into instead of flagged — any real
+    broadcast shows up as a leaf.  Equations already consuming an expanded
+    operand (e.g. the reshape after the broadcast, or anything touching
+    the H-shaped query) are skipped: the first materializing step is the
+    finding.  MHA geometries (G < 2) have nothing to expand.
+    """
+    if kv <= 0 or h % kv or h // kv < 2:
+        return []
+    g = h // kv
+    flagged = []
+    for eqn, scope in lint.walk_eqns_scoped(jaxpr):
+        if lint.has_subjaxpr(eqn):
+            continue
+        ins = [tuple(getattr(a.aval, "shape", ())) for a in eqn.invars
+               if hasattr(a, "aval")]
+        outs = [tuple(v.aval.shape) for v in eqn.outvars]
+        if any(_is_expanded(s, h, kv, g, hd) for s in ins):
+            continue
+        if any(_is_suspect(si, kv, hd) and _expands(si, so, h, kv, g, hd)
+               for si in ins for so in outs):
+            flagged.append((eqn, scope))
+    return flagged
+
+
+@lint.register_rule(RULE_ID, title="no-head-broadcast", severity=SEVERITY)
+def check(ctx: lint.LintContext) -> list:
+    """No eqn expands a KV-shaped K/V operand to H query heads."""
+    if ctx.jaxpr is None:
+        return []
+    findings = []
+    seen = set()
+    for h, kv, hd in ctx.attention_heads():
+        for eqn, scope in find_head_broadcasts(ctx.jaxpr.jaxpr, h, kv, hd):
+            if id(eqn) in seen:
+                continue
+            seen.add(id(eqn))
+            outs = [tuple(v.aval.shape) for v in eqn.outvars]
+            findings.append(lint.Finding(
+                rule_id=RULE_ID, severity=SEVERITY,
+                op_path=lint.eqn_path(eqn, scope),
+                message=(f"materializes a KV->H head broadcast "
+                         f"(H={h}, KV={kv}, head_dim={hd}): "
+                         f"{eqn.primitive.name} -> {outs} — the grouped "
+                         f"layout contract keeps K/V compact end-to-end")))
+    return findings

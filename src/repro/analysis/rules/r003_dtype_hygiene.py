@@ -1,0 +1,86 @@
+"""R003 dtype-hygiene: no fp64 leaks; weak-type and stray-upcast hazards.
+
+Three sub-checks:
+
+  * fp64 leak (error): any equation producing float64/complex128 (checked
+    in the jaxpr), or any f64/c128 buffer in the compiled HLO.  The
+    framework's precision policies are fp32-accumulate; a double anywhere
+    means an unjitted numpy scalar or an `enable_x64` leak doubled the
+    memory traffic of everything downstream.
+  * weak-typed entry (warning): a weakly-typed input or output aval on the
+    compiled function's signature.  Weak types re-specialize on the next
+    concrete python scalar — a retrace/recompile hazard for CompileCache's
+    one-trace-per-bucket contract.
+  * stray upcast (warning): a half-precision -> f32 convert_element_type
+    OUTSIDE a registry op's "repro.op." scope.  Declared accumulators (the
+    engine's fp32-accumulate epilogues, norm statistics inside dispatch
+    scopes) are expected; an upcast in open model code usually means a
+    bf16 activation silently promoted and the whole residual stream rides
+    fp32.  fp32_strict networks have no half inputs, so this fires only
+    under mixed policies.
+"""
+import re
+
+from repro.analysis import lint
+from repro.core import backends
+
+RULE_ID = "R003"
+SEVERITY = "error"   # the fp64 leak; the hazard sub-checks emit warnings
+
+_WIDE = ("float64", "complex128")
+_HALF = ("bfloat16", "float16")
+_HLO_WIDE = re.compile(r"\b(?:f64|c128)\[")
+
+
+@lint.register_rule(RULE_ID, title="dtype-hygiene", severity=SEVERITY)
+def check(ctx: lint.LintContext) -> list:
+    """No fp64; flag weak-typed entries and upcasts outside dispatch."""
+    findings = []
+    if ctx.jaxpr is not None:
+        jaxpr = ctx.jaxpr.jaxpr
+        for eqn, scope in lint.walk_eqns_scoped(jaxpr):
+            for v in eqn.outvars:
+                dt = str(getattr(v.aval, "dtype", ""))
+                if dt in _WIDE:
+                    findings.append(lint.Finding(
+                        rule_id=RULE_ID, severity="error",
+                        op_path=lint.eqn_path(eqn, scope),
+                        message=(f"{eqn.primitive.name} produces {dt} "
+                                 f"{tuple(v.aval.shape)} — fp64 leaked "
+                                 f"into an fp32-accumulate network")))
+                    break
+            if (eqn.primitive.name == "convert_element_type"
+                    and backends.OP_SCOPE_PREFIX not in scope):
+                src = [str(getattr(a.aval, "dtype", ""))
+                       for a in eqn.invars if hasattr(a, "aval")]
+                dst = str(eqn.params.get("new_dtype", ""))
+                if dst == "float32" and any(s in _HALF for s in src):
+                    findings.append(lint.Finding(
+                        rule_id=RULE_ID, severity="warning",
+                        op_path=lint.eqn_path(eqn, scope),
+                        message=(f"{src[0]} -> float32 upcast outside any "
+                                 f"'{backends.OP_SCOPE_PREFIX}*' dispatch "
+                                 f"scope — not a declared accumulator; "
+                                 f"downstream ops now run fp32")))
+        for kind, vs in (("input", jaxpr.invars), ("output", jaxpr.outvars)):
+            for i, v in enumerate(vs):
+                aval = getattr(v, "aval", None)
+                if aval is not None and getattr(aval, "weak_type", False):
+                    findings.append(lint.Finding(
+                        rule_id=RULE_ID, severity="warning",
+                        op_path=f"entry.{kind}[{i}]",
+                        message=(f"weakly-typed {kind} "
+                                 f"{str(getattr(aval, 'dtype', '?'))}"
+                                 f"{tuple(getattr(aval, 'shape', ()))} — "
+                                 f"promotes (and retraces) against the "
+                                 f"next python scalar; pass an explicit "
+                                 f"dtype")))
+    if ctx.hlo_text:
+        m = _HLO_WIDE.search(ctx.hlo_text)
+        if m:
+            findings.append(lint.Finding(
+                rule_id=RULE_ID, severity="error",
+                op_path="hlo",
+                message=(f"compiled HLO contains a {m.group(0)[:-1]} "
+                         f"buffer — fp64/complex128 survived lowering")))
+    return findings

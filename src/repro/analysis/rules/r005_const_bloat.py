@@ -1,0 +1,60 @@
+"""R005 const-bloat: no large constants baked into the trace.
+
+A concrete array captured by closure (instead of passed as an argument)
+becomes a jaxpr constant: it is serialized into every lowering, donation
+can never reclaim it, and a CompileCache re-bakes one copy PER bucket.
+Weights must flow through the params argument; lookup tables above the
+threshold should be arguments or computed in-trace.  The threshold
+(`LintContext.const_threshold`, default 1 MiB) is deliberately far above
+anything legitimate — rope inverse-frequency tables and iota masks are
+kilobytes.
+"""
+import numpy as np
+
+from repro.analysis import lint
+
+RULE_ID = "R005"
+SEVERITY = "warning"
+
+
+def _nbytes(x) -> int:
+    try:
+        return int(np.asarray(x).nbytes)
+    except Exception:
+        return 0
+
+
+def _iter_closed(closed):
+    """The closed jaxpr plus every nested ClosedJaxpr (scan bodies, pjit
+    calls keep their own consts)."""
+    yield "", closed
+    for eqn, scope in lint.walk_eqns_scoped(closed.jaxpr):
+        for val in eqn.params.values():
+            vals = val if isinstance(val, (tuple, list)) else [val]
+            for sub in vals:
+                if hasattr(sub, "consts") and hasattr(sub, "jaxpr"):
+                    yield lint.eqn_path(eqn, scope), sub
+
+
+@lint.register_rule(RULE_ID, title="const-bloat", severity=SEVERITY)
+def check(ctx: lint.LintContext) -> list:
+    """No baked-in constant exceeds the byte threshold."""
+    if ctx.jaxpr is None:
+        return []
+    findings = []
+    seen = set()
+    for where, closed in _iter_closed(ctx.jaxpr):
+        for const in getattr(closed, "consts", ()):
+            n = _nbytes(const)
+            if n <= ctx.const_threshold or id(const) in seen:
+                continue
+            seen.add(id(const))
+            arr = np.asarray(const)
+            findings.append(lint.Finding(
+                rule_id=RULE_ID, severity=SEVERITY,
+                op_path=where or "entry",
+                message=(f"constant {arr.dtype}{arr.shape} ({n} bytes) "
+                         f"baked into the trace (threshold "
+                         f"{ctx.const_threshold}) — pass it as an "
+                         f"argument so donation/caching can manage it")))
+    return findings

@@ -63,6 +63,17 @@ from repro.kernels.common import apply_act, im2col
 
 OP_SET = ("matmul", "bmm", "conv2d", "attention")
 
+# Every engine dispatch runs its backend impl under
+# jax.named_scope(op_scope(op)); the marker lands on the traced equations'
+# name stacks, where the trace linter's R002 rule (analysis/rules/) checks
+# that every dense contraction originated from a registry op.
+OP_SCOPE_PREFIX = "repro.op."
+
+
+def op_scope(op: str) -> str:
+    """The named-scope marker the engine wraps a dispatch of `op` in."""
+    return OP_SCOPE_PREFIX + op
+
 
 @dataclasses.dataclass(frozen=True)
 class OpContext:
@@ -360,8 +371,54 @@ def tile_plan(op: str, shapes: tuple, dtype, backend: str,
         plan = tuple(picker(op, shapes, dtype_str))
         _TILE_RECORDS[key] = {"pick": list(plan), "est_ms": None,
                               "candidates_timed": [], "source": "heuristic"}
+    # Plan-time legality gate: a measured winner or a persisted table entry
+    # (possibly written by another device/version) must satisfy the same
+    # alignment/VMEM/extent conditions the kernels assume.  Heuristic picks
+    # are legal by construction; warn loudly rather than raise so a stale
+    # table degrades (the pick still runs) instead of bricking dispatch —
+    # the lint rule R004 turns the same condition into a hard finding.
+    problems = validate_tiles(op, shapes, dtype_str, plan)
+    if problems:
+        src = _TILE_RECORDS.get(key, {}).get("source", "?")
+        warnings.warn(
+            f"autotune pick {plan} for {key} ({src}) fails kernel "
+            f"legality: {'; '.join(problems)}", stacklevel=2)
     _TILE_CACHE[key] = plan
     return plan
+
+
+def validate_tiles(op: str, shapes: tuple, dtype, tiles: tuple) -> list[str]:
+    """Static legality of a resolved tile plan for one dispatch problem.
+
+    Args:
+      op: registry op name (plus the "attention_bwd" backward key).
+      shapes: the op's cache-key shapes (see `gemm_dims` /
+        `kernel_ops.attention_dims` for the accepted forms).
+      dtype: operand dtype (anything `jnp.dtype` accepts).
+      tiles: the resolved plan — (bm, bk, bn) for GEMM-shaped ops,
+        (bq, bk) for attention.  An empty plan is vacuously legal
+        (untiled backend).
+
+    Returns a list of human-readable problems (empty = legal): MXU
+    (8, 128) lane alignment, the kernels' VMEM working-set budget, and
+    tiles no larger than the padded problem extents.  Malformed
+    shapes/plans (a corrupt persisted table) come back as a problem
+    string, never an exception.
+    """
+    if not tiles:
+        return []
+    try:
+        if op in ("attention", "attention_bwd"):
+            _, sq, skv, _, _, d = kernel_ops.attention_dims(shapes)
+            return kernel_ops.validate_attention_tiles(
+                sq, skv, d, dtype, tuple(tiles),
+                bwd=(op == "attention_bwd"))
+        dims = gemm_dims(op, shapes)
+        if dims is None:
+            return []
+        return kernel_ops.validate_gemm_tiles(*dims, dtype, tuple(tiles))
+    except Exception as e:
+        return [f"unparseable shapes/plan for op {op!r}: {e!r}"]
 
 
 def cache_stats() -> dict[str, int]:
@@ -393,16 +450,41 @@ def clear_tile_cache() -> None:
 # Incremented at trace time by ComputeEngine — under jit each compiled
 # program pays them exactly once, so a snapshot diff around a trace is the
 # static op plan of that program (CompiledNetwork.profile reports it).
+# Alongside the counters, a bounded LOG keeps the per-dispatch detail
+# (shapes, dtype, resolved tile plan): a slice of it between two
+# `dispatch_log_size()` marks is the full dispatch record of one trace —
+# the input to the trace linter's R001/R004 rules.
 
 _DISPATCH = collections.Counter()
+_DISPATCH_LOG: list[dict] = []
+_DISPATCH_LOG_LIMIT = 65536
 
 
-def record_dispatch(backend: str, op: str) -> None:
+def record_dispatch(backend: str, op: str, shapes: tuple | None = None,
+                    dtype=None, tiles: tuple = ()) -> None:
+    """Count one engine dispatch and append its detail record
+    ``{backend, op, shapes, dtype, tiles}`` to the bounded log (oldest
+    records win; past the limit only the counter advances)."""
     _DISPATCH[(backend, op)] += 1
+    if len(_DISPATCH_LOG) < _DISPATCH_LOG_LIMIT:
+        _DISPATCH_LOG.append({
+            "backend": backend, "op": op, "shapes": shapes,
+            "dtype": None if dtype is None else str(jnp.dtype(dtype)),
+            "tiles": tuple(tiles or ())})
 
 
 def dispatch_counts() -> dict[tuple[str, str], int]:
     return dict(_DISPATCH)
+
+
+def dispatch_log() -> list[dict]:
+    """Copy of the per-dispatch detail records (trace order)."""
+    return list(_DISPATCH_LOG)
+
+
+def dispatch_log_size() -> int:
+    """Current log length — snapshot before a trace, slice after."""
+    return len(_DISPATCH_LOG)
 
 
 def counts_since(snapshot: Mapping[tuple[str, str], int]
@@ -412,7 +494,9 @@ def counts_since(snapshot: Mapping[tuple[str, str], int]
 
 
 def reset_dispatch_counts() -> None:
+    """Clear the dispatch counters AND the detail log."""
     _DISPATCH.clear()
+    _DISPATCH_LOG.clear()
 
 
 # --------------------------------------------------------- shared pieces ---

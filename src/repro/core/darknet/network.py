@@ -17,6 +17,7 @@ import collections
 import contextlib
 import dataclasses
 import time
+import warnings
 from typing import Any, Iterable
 
 import jax
@@ -175,7 +176,8 @@ class Network:
     # -------------------------------------------------------------- compile
     def compile(self, params: dict, batch_size: int = 1, *,
                 dtype=jnp.float32, donate_params: bool = False,
-                autotune: str | None = None) -> "CompiledNetwork":
+                autotune: str | None = None,
+                lint: str | None = None) -> "CompiledNetwork":
         """Lower the planned layer list into a single compiled artifact.
 
         One jit trace happens here (AOT lower + compile); every
@@ -193,13 +195,31 @@ class Network:
             measured warmup pass — first-seen block-pick keys are timed
             and persisted to the per-device table (docs/autotune.md).
             None inherits the process policy.
+          lint: optional trace-lint gate (docs/lint.md) over the captured
+            jaxpr/HLO/dispatch log.  "warn" emits a UserWarning listing
+            any findings; "error" additionally raises
+            `repro.analysis.lint.LintError` on error-severity findings.
+            None (the default) skips linting.
 
         Returns a `CompiledNetwork`.  Raises ValueError for an unknown
-        autotune policy.
+        autotune policy or lint mode, and `LintError` under
+        ``lint="error"`` when an error-severity finding survives.
         """
-        return CompiledNetwork(self, params, batch_size, dtype=dtype,
-                               donate_params=donate_params,
-                               autotune=autotune)
+        if lint not in (None, "warn", "error"):
+            raise ValueError(f"unknown lint mode {lint!r}; choose "
+                             f"'warn', 'error' or None")
+        cn = CompiledNetwork(self, params, batch_size, dtype=dtype,
+                             donate_params=donate_params,
+                             autotune=autotune)
+        if lint is not None:
+            from repro.analysis.lint import LintError
+            report = cn.lint()
+            if lint == "error" and not report.ok:
+                raise LintError(report)
+            if report.findings:
+                warnings.warn("trace-lint findings:\n" + report.format(),
+                              stacklevel=2)
+        return cn
 
     def compile_cache(self, params: dict,
                       buckets: Iterable[int] = (1, 2, 4, 8), *,
@@ -250,22 +270,51 @@ class CompiledNetwork:
         donate = (0,) if donate_params else ()
         before = backends.dispatch_counts()
         before_tuned = set(backends.autotune_report())
+        log_mark = backends.dispatch_log_size()
         policy = (backends.autotune_policy(autotune) if autotune
                   else contextlib.nullcontext())
         with policy:
-            self._compiled = (jax.jit(fwd, donate_argnums=donate)
-                              .lower(params, self.in_spec).compile())
+            # .trace() keeps the single-trace invariant while exposing the
+            # closed jaxpr the trace linter walks; .lower().compile() on
+            # the same Traced does not retrace.
+            traced = (jax.jit(fwd, donate_argnums=donate)
+                      .trace(params, self.in_spec))
+            self._compiled = traced.lower().compile()
+        self.closed_jaxpr = traced.jaxpr
         # The single trace just happened; the counter diff IS the network's
         # static engine-op plan (e.g. {('xla','conv2d'): n_conv_layers}),
-        # and the autotune-report diff is the block-pick keys this lowering
-        # resolved first (heuristic, measured, or served from disk).
+        # the log slice its per-dispatch detail (shapes/dtype/tiles — the
+        # linter's R004 input), and the autotune-report diff the block-pick
+        # keys this lowering resolved first (heuristic, measured, or
+        # served from disk).
         self.op_counts = backends.counts_since(before)
+        self.op_log = tuple(backends.dispatch_log()[log_mark:])
         self.autotune_keys = tuple(
             k for k in backends.autotune_report() if k not in before_tuned)
 
     @property
     def trace_count(self) -> int:
         return self._trace_count
+
+    def hlo_text(self) -> str:
+        """The compiled executable's optimized HLO (the text
+        `analysis/hlo_cost` parses)."""
+        return self._compiled.as_text()
+
+    def lint(self, *, suppress=(), const_threshold: int | None = None):
+        """Run the trace-lint rules (docs/lint.md) over this artifact's
+        captured compile record — the closed jaxpr, the compiled HLO and
+        the dispatch log; nothing retraces or recompiles.
+
+        Args:
+          suppress: suppression tokens, e.g. ("R005", "R002:scan").
+          const_threshold: R005 byte threshold override.
+
+        Returns a `repro.analysis.lint.LintReport`.
+        """
+        from repro.analysis import lint as lint_mod
+        return lint_mod.lint_compiled_network(
+            self, suppress=suppress, const_threshold=const_threshold)
 
     def __call__(self, x, params: dict | None = None):
         """Run the compiled executable on a batch.

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import backends
@@ -44,7 +45,9 @@ class ComputeEngine:
         """Look up the backend, consult the autotune cache (under the
         active policy — a "measure" policy may time candidates here, on
         first sight of the key), count the dispatch (trace-time: compiled
-        programs pay this once)."""
+        programs pay this once; the detail record — shapes, dtype and the
+        RESOLVED tiles, pinned picks included — feeds the trace linter's
+        dispatch log)."""
         be = backends.get_backend(self.backend)
         if self.bm and self.bk and self.bn and op != "attention":
             # Pinned (bm, bk, bn) applies to the GEMM-shaped ops only;
@@ -53,7 +56,8 @@ class ComputeEngine:
             tiles = (self.bm, self.bk, self.bn)
         else:
             tiles = be.tiles(op, shapes, dtype, interpret=self.interpret)
-        backends.record_dispatch(self.backend, op)
+        backends.record_dispatch(self.backend, op, shapes=shapes,
+                                 dtype=dtype, tiles=tiles)
         return backends.OpContext(precision=self.precision,
                                   interpret=self.interpret, tiles=tiles)
 
@@ -91,8 +95,9 @@ class ComputeEngine:
         wc = w.astype(self.precision.compute_dtype)
         xc, wc, scale, shift = self._guard("matmul", xc, wc, scale, shift)
         ctx = self._resolve("matmul", (xc.shape[0], k, n), xc.dtype)
-        y = self._op("matmul")(xc, wc, scale, shift, act=act,
-                               out_dtype=out_dtype, ctx=ctx)
+        with jax.named_scope(backends.op_scope("matmul")):
+            y = self._op("matmul")(xc, wc, scale, shift, act=act,
+                                   out_dtype=out_dtype, ctx=ctx)
         return y.reshape(*lead, n)
 
     def bmm(self, x, w, *, out_dtype=None):
@@ -108,7 +113,8 @@ class ComputeEngine:
         wc = w.astype(self.precision.compute_dtype)
         xc, wc = self._guard("bmm", xc, wc)
         ctx = self._resolve("bmm", (m, k, n), xc.dtype)
-        return self._op("bmm")(xc, wc, out_dtype=out_dtype, ctx=ctx)
+        with jax.named_scope(backends.op_scope("bmm")):
+            return self._op("bmm")(xc, wc, out_dtype=out_dtype, ctx=ctx)
 
     def conv2d(self, x, w, *, scale=None, shift=None, size: int,
                stride: int = 1, pad: int = 0, act: str = "linear",
@@ -131,9 +137,10 @@ class ComputeEngine:
         xc, wc, scale, shift = self._guard("conv2d", xc, wc, scale, shift)
         ctx = self._resolve(
             "conv2d", (xc.shape, wc.shape[-1], size, stride, pad), xc.dtype)
-        return self._op("conv2d")(xc, wc, scale, shift, size=size,
-                                  stride=stride, pad=pad, act=act,
-                                  out_dtype=out_dtype, ctx=ctx)
+        with jax.named_scope(backends.op_scope("conv2d")):
+            return self._op("conv2d")(xc, wc, scale, shift, size=size,
+                                      stride=stride, pad=pad, act=act,
+                                      out_dtype=out_dtype, ctx=ctx)
 
     def attention(self, q, k, v, *, causal: bool = True, sm_scale=None,
                   kv_len=None):
@@ -178,9 +185,10 @@ class ComputeEngine:
         qc, kc, vc, sm_scale = self._guard("attention", qc, kc, vc,
                                            sm_scale)
         ctx = self._resolve("attention", (qc.shape, kc.shape), qc.dtype)
-        return self._op("attention")(qc, kc, vc, causal=causal,
-                                     sm_scale=sm_scale, kv_len=kv_len,
-                                     ctx=ctx)
+        with jax.named_scope(backends.op_scope("attention")):
+            return self._op("attention")(qc, kc, vc, causal=causal,
+                                         sm_scale=sm_scale, kv_len=kv_len,
+                                         ctx=ctx)
 
     def einsum(self, spec: str, x, y, *, out_dtype=None,
                acc_dtype=jnp.float32):
@@ -189,10 +197,11 @@ class ComputeEngine:
         acc_dtype=precision.reduce_dtype lets collectives ride bf16 under
         the mixed policy (MoE expert GEMMs)."""
         out_dtype = out_dtype or self.precision.compute_dtype
-        acc = jnp.einsum(spec, x.astype(self.precision.compute_dtype),
-                         y.astype(self.precision.compute_dtype),
-                         preferred_element_type=acc_dtype,
-                         precision=self.precision.lax_precision)
+        with jax.named_scope(backends.op_scope("einsum")):
+            acc = jnp.einsum(spec, x.astype(self.precision.compute_dtype),
+                             y.astype(self.precision.compute_dtype),
+                             preferred_element_type=acc_dtype,
+                             precision=self.precision.lax_precision)
         return acc.astype(out_dtype)
 
 

@@ -99,6 +99,80 @@ def candidate_blocks(op: str, m: int, k: int, n: int, dtype
     return cands
 
 
+def validate_gemm_tiles(m: int, k: int, n: int, dtype,
+                        tiles: tuple) -> list[str]:
+    """Static legality of a (bm, bk, bn) plan for an (m, k, n) GEMM.
+
+    The conditions the tiled kernels assume (the trace linter's R004 and
+    the autotune cache's plan-time gate both call this): three positive
+    ints, MXU lane alignment (bm multiple of 8 sublanes, bk/bn multiples
+    of the 128-lane width), the double-buffered `_working_set` under the
+    VMEM budget, and no tile longer than its padded problem extent (the
+    grid would schedule pure-padding steps).  Returns problem strings;
+    empty means legal.
+    """
+    if len(tiles) != 3 or not all(
+            isinstance(t, int) and not isinstance(t, bool) and t > 0
+            for t in tiles):
+        return [f"plan {tiles!r} is not three positive ints (bm, bk, bn)"]
+    bm, bk, bn = tiles
+    problems = []
+    if bm % 8:
+        problems.append(f"bm={bm} is not a multiple of 8 sublanes")
+    if bk % 128:
+        problems.append(f"bk={bk} is not a multiple of the 128-lane width")
+    if bn % 128:
+        problems.append(f"bn={bn} is not a multiple of the 128-lane width")
+    ws = _working_set(bm, bk, bn, jnp.dtype(dtype).itemsize)
+    if ws > _VMEM_BUDGET:
+        problems.append(f"working set {ws} B exceeds the VMEM budget "
+                        f"{_VMEM_BUDGET} B")
+    for name, tile, dim, align in (("bm", bm, m, 8), ("bk", bk, k, 128),
+                                   ("bn", bn, n, 128)):
+        if tile > _round_up(dim, align):
+            problems.append(f"{name}={tile} exceeds the padded problem "
+                            f"extent {_round_up(dim, align)} (dead grid "
+                            f"steps)")
+    return problems
+
+
+def validate_attention_tiles(sq: int, skv: int, d: int, dtype,
+                             tiles: tuple, *, bwd: bool = False) -> list[str]:
+    """Static legality of a (bq, bk) sequence-tile plan for a flash
+    attention problem (q length sq, key length skv, head_dim d).
+
+    Same contract as `validate_gemm_tiles`: alignment (bq multiple of 8,
+    bk multiple of 128), the grouped-KV working set under the VMEM budget
+    (`_attention_bwd_working_set` when ``bwd`` — the backward keeps three
+    fp32 score tiles and the dK/dV accumulators live), and tiles no
+    longer than the padded sequence extents.  Returns problem strings.
+    """
+    if len(tiles) != 2 or not all(
+            isinstance(t, int) and not isinstance(t, bool) and t > 0
+            for t in tiles):
+        return [f"plan {tiles!r} is not two positive ints (bq, bk)"]
+    bq, bk = tiles
+    problems = []
+    if bq % 8:
+        problems.append(f"bq={bq} is not a multiple of 8 sublanes")
+    if bk % 128:
+        problems.append(f"bk={bk} is not a multiple of the 128-lane width")
+    working_set = (_attention_bwd_working_set if bwd
+                   else _attention_working_set)
+    ws = working_set(bq, bk, d, jnp.dtype(dtype).itemsize)
+    if ws > _VMEM_BUDGET:
+        which = "backward " if bwd else ""
+        problems.append(f"{which}working set {ws} B exceeds the VMEM "
+                        f"budget {_VMEM_BUDGET} B")
+    if bq > _round_up(sq, 8):
+        problems.append(f"bq={bq} exceeds the padded query extent "
+                        f"{_round_up(sq, 8)} (dead grid steps)")
+    if bk > _round_up(skv, 128):
+        problems.append(f"bk={bk} exceeds the padded key extent "
+                        f"{_round_up(skv, 128)} (dead grid steps)")
+    return problems
+
+
 def bench_thunk(op: str, m: int, k: int, n: int, dtype,
                 tiles: tuple[int, int, int], *, interpret: bool = True):
     """Zero-arg thunk running one compiled call of the op's GEMM problem

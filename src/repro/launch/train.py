@@ -12,16 +12,11 @@ crash at step N and a restart replays step N bit-identically
 from __future__ import annotations
 
 import argparse
-import json
-import os
-import time
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import manager as ckpt
-from repro.configs.base import SHAPES, ShapeConfig, get_arch, reduced
+from repro.configs.base import ShapeConfig, get_arch, reduced
 from repro.core import make_engine
 from repro.data.pipeline import SyntheticLM
 from repro.launch.fault import FailureInjector, StepWatchdog

@@ -14,8 +14,6 @@ without allocating.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
@@ -25,8 +23,8 @@ from repro.models import frontend as fe
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
 from repro.models.common import (chunked_cross_entropy, embed_init,
-                                 embed_lookup, lm_head_logits, norm_apply,
-                                 norm_init, rope_table)
+                                 embed_lookup, norm_apply, norm_init,
+                                 rope_table)
 from repro.models.mlp import mlp_forward, mlp_init
 from repro.sharding import hints
 

@@ -6,7 +6,6 @@ of seq_len), per the harness definition.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import ComputeEngine

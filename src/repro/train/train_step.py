@@ -9,8 +9,6 @@ per-replica batch, keeping activation memory at 1/M for M microbatches.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import ARCH_IDS, get_arch, reduced, input_specs
+from repro.configs.base import ARCH_IDS, get_arch, reduced
 from repro.core import make_engine
 from repro.models import transformer as tfm
 from repro.models.common import lm_head_logits

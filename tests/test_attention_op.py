@@ -29,6 +29,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.lint import walk_eqns
+from repro.analysis.rules.r001_head_broadcast import find_head_broadcasts
 from repro.configs.base import get_arch, reduced
 from repro.core import backends, make_engine, register_backend
 from repro.kernels import ref
@@ -330,7 +332,8 @@ def test_backward_trace_has_no_kv_h_broadcast():
     group reduction happens inside the dK/dV kernel, so no equation
     anywhere in the backward jaxpr expands a KV-shaped operand to H heads
     (in either the engine (B, S, heads, d) or kernel (B, heads, S, d)
-    axis order)."""
+    axis order — `find_head_broadcasts`, the linter's R001 core, covers
+    both orders)."""
     B, S, H, KV, hd = 2, 32, 4, 2, 16
     G = H // KV
     eng = make_engine("pallas")
@@ -341,28 +344,14 @@ def test_backward_trace_has_no_kv_h_broadcast():
         return jnp.sum(eng.attention(q, k, v, causal=True) * w)
 
     closed = jax.make_jaxpr(jax.grad(loss, argnums=(0, 1, 2)))(q, k, v)
-    suspects = {(B, S, KV, hd), (B, KV, S, hd),
-                (B, S, KV, 1, hd), (B, S, KV, G, hd), (B, KV, G, S, hd)}
-    expanded = {(B, S, H, hd), (B, H, S, hd),
-                (B, S, KV, G, hd), (B, KV, G, S, hd)}
-    flagged = []
-    for eqn in _walk_eqns(closed.jaxpr):
-        if _has_subjaxpr(eqn):
-            continue
-        ins = {tuple(getattr(a.aval, "shape", ())) for a in eqn.invars
-               if hasattr(a, "aval")}
-        outs = {tuple(getattr(o.aval, "shape", ())) for o in eqn.outvars}
-        if (ins & suspects) and (outs & expanded) and not (ins & expanded):
-            flagged.append(eqn)
+    flagged = find_head_broadcasts(closed.jaxpr, H, KV, hd)
     assert not flagged, (
         "backward trace materializes an H-broadcast of K/V:\n"
-        + "\n".join(str(e) for e in flagged))
-    # the fingerprint detects the expansion the compact layout avoids
-    bad = jax.make_jaxpr(lambda k: jnp.repeat(k, G, axis=2))(
-        jnp.zeros((B, S, KV, hd)))
-    hits = [e for e in _walk_eqns(bad.jaxpr)
-            if {tuple(o.aval.shape) for o in e.outvars} & expanded]
-    assert hits
+        + "\n".join(str(e) for e, _ in flagged))
+    # the detector catches the expansion in the KERNEL axis order too
+    bad = jax.make_jaxpr(lambda k: jnp.repeat(k, G, axis=1))(
+        jnp.zeros((B, KV, S, hd)))
+    assert find_head_broadcasts(bad.jaxpr, H, KV, hd)
 
 
 @pytest.mark.parametrize("backend", BACKENDS)
@@ -455,51 +444,11 @@ def test_bad_kv_len_shape_rejected():
 
 
 # ------------------------------------------- no-H-broadcast regression ---
-
-def _walk_eqns(jaxpr):
-    """All equations of a jaxpr, recursing into sub-jaxprs (scan bodies,
-    pjit calls, interpret-mode pallas_call)."""
-    for eqn in jaxpr.eqns:
-        yield eqn
-        for val in eqn.params.values():
-            vals = val if isinstance(val, (tuple, list)) else [val]
-            for sub in vals:
-                if isinstance(sub, jax.core.ClosedJaxpr):
-                    yield from _walk_eqns(sub.jaxpr)
-                elif isinstance(sub, jax.core.Jaxpr):
-                    yield from _walk_eqns(sub)
-
-
-def _has_subjaxpr(eqn):
-    for val in eqn.params.values():
-        vals = val if isinstance(val, (tuple, list)) else [val]
-        if any(isinstance(s, (jax.core.ClosedJaxpr, jax.core.Jaxpr))
-               for s in vals):
-            return True
-    return False
-
-
-def _broadcast_fingerprints(jaxpr, B, S, H, KV, hd):
-    """Equations that materialize an H-broadcast of a (B, S, KV, hd) K/V:
-    either the final suspect->(B, S, H, hd) step of a repeat/tile/gather,
-    or the (B, S, KV, G, hd) broadcast intermediate itself.  Only LEAF
-    equations are flagged — call-like eqns (pjit, scan, pallas_call)
-    aggregate their whole body's input->output and are instead recursed
-    into, where any real broadcast shows up as a leaf."""
-    G = H // KV
-    suspects = {(B, S, KV, hd), (B, S, KV, 1, hd), (B, S, KV, G, hd)}
-    flagged = []
-    for eqn in _walk_eqns(jaxpr):
-        if _has_subjaxpr(eqn):
-            continue
-        ins = {tuple(getattr(a.aval, "shape", ())) for a in eqn.invars
-               if hasattr(a, "aval")}
-        outs = {tuple(v.aval.shape) for v in eqn.outvars}
-        if not (ins & suspects):
-            continue
-        if (B, S, H, hd) in outs or (B, S, KV, G, hd) in outs:
-            flagged.append(eqn)
-    return flagged
+# The jaxpr fingerprint machinery that used to live here (a private
+# `_walk_eqns` / `_broadcast_fingerprints`) is now the linter's R001 rule:
+# `repro.analysis.lint.walk_eqns` + `find_head_broadcasts` are the ONE
+# shared implementation, so the regression tests and the shipped lint gate
+# can never drift.
 
 
 def test_prefill_jaxpr_has_no_kv_h_broadcast():
@@ -517,15 +466,18 @@ def test_prefill_jaxpr_has_no_kv_h_broadcast():
     step = make_prefill_step(eng, cfg)
     closed = jax.make_jaxpr(lambda p, t: step(p, {"tokens": t}))(params,
                                                                  toks)
-    flagged = _broadcast_fingerprints(closed.jaxpr, B, S, H, KV, hd)
+    flagged = find_head_broadcasts(closed.jaxpr, H, KV, hd)
     assert not flagged, (
         "prefill trace materializes an H-broadcast of K/V:\n"
-        + "\n".join(str(e) for e in flagged))
+        + "\n".join(str(e) for e, _ in flagged))
     # the detector itself must catch the old formulation
     def repeat_prefill(k):
         return jnp.repeat(k, H // KV, axis=2)
     bad = jax.make_jaxpr(repeat_prefill)(jnp.zeros((B, S, KV, hd)))
-    assert _broadcast_fingerprints(bad.jaxpr, B, S, H, KV, hd)
+    assert find_head_broadcasts(bad.jaxpr, H, KV, hd)
+    # ...and the walk helper still recurses into sub-jaxprs (pallas_call
+    # bodies included): the prefill trace has leaf eqns below call-likes.
+    assert sum(1 for _ in walk_eqns(closed.jaxpr)) > len(closed.jaxpr.eqns)
 
 
 def test_attention_dispatch_receives_compact_kv():

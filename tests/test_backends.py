@@ -15,7 +15,7 @@ import pytest
 
 from repro.core import (ComputeEngine, backends, get_backend, list_backends,
                         make_engine, register_backend)
-from repro.core.darknet.network import CompiledNetwork, Network
+from repro.core.darknet.network import Network
 
 ALL_BACKENDS = ("pallas", "xla", "ref")
 # atol per precision policy: fp32_strict accumulates in fp32 everywhere, so

@@ -2,8 +2,6 @@
 cost analysis (loop-free) and against analytic expectations (loops)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.analysis import hlo_cost
 
@@ -86,7 +84,6 @@ def test_bytes_roughly_match_xla_for_loop_free():
 
 
 def test_collectives_counted_with_factors():
-    import os
     # single-device process: collectives only appear under a mesh — use the
     # dryrun results instead; here just check the regex layer on a synthetic
     # module.

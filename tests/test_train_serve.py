@@ -1,6 +1,5 @@
 """Training-step behaviour (loss decreases, microbatch equivalence,
 compression) and serve-side cache structure consistency."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -13,7 +12,7 @@ from repro.models import transformer as tfm
 from repro.serve import kvcache
 from repro.serve.serve_step import make_decode_step, make_prefill_step
 from repro.train import optimizer as opt
-from repro.train.compression import ef_compress, ef_compress_tree
+from repro.train.compression import ef_compress
 from repro.train.train_step import make_train_step
 
 ENGINE = make_engine("xla", "fp32_strict")
