@@ -1,63 +1,59 @@
-"""Serve a small LM with batched requests: prefill + batched greedy decode.
+"""Serve a small LM through the continuous-batching paged-pool frontend.
 
     PYTHONPATH=src python examples/serve_lm.py
 
-Demonstrates the serving path the decode_* dry-run cells lower: prefill
-builds the (sequence-shardable) KV cache, then a batch of requests decodes
-in lockstep, one token per step, with continuous-batching-style slot reuse.
+The default LM serving path: a ragged batch of greedy-decode requests runs
+through `PagedServingEngine` — chunked prefill interleaved with decode over
+a shared pool of fixed-size KV blocks, dispatched through a bounded set of
+compiled shape buckets (docs/serving.md).  The fixed-slot `ServingEngine`
+remains as the baseline; `benchmarks/lm_serving.py` runs the two
+head-to-head at equal KV memory.
 """
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import get_arch, reduced
 from repro.core import make_engine
 from repro.models import transformer as tfm
-from repro.serve import kvcache
-from repro.serve.serve_step import greedy_sample, make_decode_step
+from repro.serve.engine import Request
+from repro.serve.scheduler import PagedServingEngine
 
 
 def main():
-    cfg = reduced(get_arch("qwen2-1.5b"))
+    cfg = reduced(get_arch("qwen2-0.5b"))
     engine = make_engine("xla", "fp32_strict")
     params = tfm.init_params(jax.random.PRNGKey(0), cfg)
 
-    B, S_prompt, S_max, gen = 4, 48, 64, 16
-    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S_prompt), 0,
-                                 cfg.vocab_size)
+    rng = np.random.default_rng(1)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        int(rng.integers(4, 24))).tolist(),
+                    max_new=int(rng.integers(4, 13)))
+            for i in range(8)]
 
-    # prefill into a cache with headroom for generation
-    caches = kvcache.cache_init(cfg, B, S_max)
-    decode = jax.jit(make_decode_step(engine, cfg))
+    frontend = PagedServingEngine(
+        cfg, params, engine=engine, kv_blocks=16, block_size=16,
+        max_len=64, chunk=8, prefill_budget=32)
 
-    # prefill via decode steps (simple path); production uses
-    # make_prefill_step + cache copy-in, lowered in the dry-run.
     t0 = time.perf_counter()
-    logits = None
-    for t in range(S_prompt):
-        logits, caches = decode(params, caches, prompts[:, t:t + 1],
-                                jnp.array(t, jnp.int32))
-    t_prefill = time.perf_counter() - t0
+    frontend.run(reqs)
+    wall = time.perf_counter() - t0
 
-    # batched greedy decode
-    out_tokens = []
-    tok = greedy_sample(logits)[:, None]
-    t0 = time.perf_counter()
-    for t in range(S_prompt, S_prompt + gen):
-        out_tokens.append(tok)
-        logits, caches = decode(params, caches, tok,
-                                jnp.array(t, jnp.int32))
-        tok = greedy_sample(logits)[:, None]
-    t_decode = time.perf_counter() - t0
-
-    gen_ids = jnp.concatenate(out_tokens, axis=1)
-    print(f"[serve_lm] batch={B} prompt={S_prompt} generated={gen}")
-    print(f"[serve_lm] prefill: {t_prefill:.2f}s  "
-          f"decode: {t_decode/gen*1000:.1f} ms/token/batch")
+    st = frontend.stats()
+    lat = st["latency_s"]
+    print(f"[serve_lm] {st['requests']['completed']}/{len(reqs)} requests, "
+          f"{st['tokens']} tokens in {wall:.2f}s "
+          f"({st['tokens'] / wall:.1f} tok/s)")
+    print(f"[serve_lm] latency p50={lat['p50'] * 1e3:.0f}ms "
+          f"p95={lat['p95'] * 1e3:.0f}ms p99={lat['p99'] * 1e3:.0f}ms")
+    print(f"[serve_lm] peak concurrency={st['peak_active']} "
+          f"pool peak={st['pool']['peak_used']}/{st['pool']['n_blocks']} "
+          f"blocks, traces={st['compile']['traces']}/{st['trace_bound']}")
     print("[serve_lm] sample generations (token ids):")
-    for b in range(B):
-        print(f"  req{b}: {list(map(int, gen_ids[b]))[:12]}")
+    for r in reqs[:4]:
+        print(f"  req{r.rid}: prompt[{len(r.prompt)}] -> {r.out}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,91 @@
+"""Bucketed step-compile cache: one jit trace per shape bucket for an
+arbitrary step function.
+
+`CompileCache` (core/darknet/network.py) solves ragged CNN traffic by
+padding batches to a small set of compiled batch-size buckets.  LM serving
+has the same problem in more dimensions: the continuous-batching scheduler
+(serve/scheduler.py) dispatches decode steps whose active-set size AND
+per-sequence block-table width both vary per step.  Left alone, `jax.jit`
+would retrace on every distinct (batch, n_blocks) pair — unbounded compile
+churn under a ragged arrival stream.
+
+`StepCompileCache` is the function-level twin of the network-level cache:
+wrap a step fn once, pad every dynamic axis up to a configured bucket, and
+the jit cache can only ever hold |bucket set| entries.  `pick_bucket`
+implements the shared smallest-bucket-that-fits rule; `traces` counts
+actual retraces (a python-side counter incremented inside the traced fn, so
+compiled-path calls never bump it) — the serving benchmark's retrace gate
+asserts against it.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Callable, Iterable
+
+import jax
+
+
+def normalize_buckets(buckets: Iterable[int]) -> tuple[int, ...]:
+    """Sorted unique positive bucket sizes.  Raises ValueError when empty
+    or non-positive."""
+    bs = tuple(sorted({int(b) for b in buckets}))
+    if not bs or bs[0] < 1:
+        raise ValueError(f"buckets must be positive ints, got {buckets!r}")
+    return bs
+
+
+def pick_bucket(n: int, buckets: tuple[int, ...]) -> int:
+    """Smallest bucket >= n.  Raises ValueError when n exceeds the top
+    bucket (callers split oversize work before dispatch) or n < 1."""
+    if n < 1:
+        raise ValueError(f"need n >= 1, got {n}")
+    for b in buckets:
+        if b >= n:
+            return b
+    raise ValueError(f"{n} exceeds the top bucket of {buckets}")
+
+
+class StepCompileCache:
+    """One jit trace per shape bucket for a step function.
+
+    The wrapped fn is jit'd exactly once; distinct argument shapes retrace
+    as usual under jax, but because callers pad every dynamic axis to a
+    bucket from a fixed set (via `pick_bucket`), the number of traces is
+    bounded by the bucket-set product instead of the traffic's shape
+    diversity.  `traces`/`calls`/`stats()` expose the retrace accounting
+    the serving smoke gate asserts on.
+
+    `static_argnames` forwards to `jax.jit` for hashable static args
+    (engine/config objects).
+    """
+
+    def __init__(self, fn: Callable, *, name: str = "step",
+                 static_argnames=()):
+        self.name = name
+        self._traces = 0
+
+        def counted(*args, **kwargs):
+            self._traces += 1  # python side effect: trace-time only
+            return fn(*args, **kwargs)
+
+        self._jit = jax.jit(counted, static_argnames=static_argnames)
+        self.calls = 0
+        self._dispatch_shapes = collections.Counter()
+
+    def __call__(self, *args, **kwargs):
+        self.calls += 1
+        return self._jit(*args, **kwargs)
+
+    def record(self, key) -> None:
+        """Log one dispatch under a caller-chosen bucket key (shows up in
+        `stats()['dispatches']`)."""
+        self._dispatch_shapes[key] += 1
+
+    @property
+    def traces(self) -> int:
+        return self._traces
+
+    def stats(self) -> dict:
+        return {"name": self.name, "traces": self._traces,
+                "calls": self.calls,
+                "dispatches": dict(self._dispatch_shapes)}

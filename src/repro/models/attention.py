@@ -185,33 +185,45 @@ def cache_write(cache, new, pos, axis: int = 1):
             c, n, p, axis=axis - 1))(cache, new, pos)
 
 
-def _pos_mask(s, pos, k_axis: int):
+def _pos_mask(s, pos, k_axis: int, q_axis: int | None = None):
+    """Mask key positions beyond the live extent.  `pos` is the START
+    position of the current chunk (scalar or (B,)); with a q_axis of
+    extent C > 1 (chunked prefill), query i may see keys <= pos + i —
+    right-aligned causality between the chunk's own tokens."""
     k_idx = jax.lax.broadcasted_iota(jnp.int32, s.shape, k_axis)
     if pos.ndim == 0:
-        return jnp.where(k_idx <= pos, s, _NEG)
-    shape = [1] * s.ndim
-    shape[0] = pos.shape[0]
-    return jnp.where(k_idx <= pos.reshape(shape), s, _NEG)
+        limit = pos
+    else:
+        shape = [1] * s.ndim
+        shape[0] = pos.shape[0]
+        limit = pos.reshape(shape)
+    if q_axis is not None and s.shape[q_axis] > 1:
+        limit = limit + jax.lax.broadcasted_iota(jnp.int32, s.shape, q_axis)
+    return jnp.where(k_idx <= limit, s, _NEG)
 
 
 def gqa_decode(engine: ComputeEngine, p, x, cache, pos, cos, sin, cfg):
-    """One-token decode against a sequence-sharded KV cache.
+    """Decode a chunk of C new tokens against a sequence-sharded KV cache
+    (C == 1 is plain one-token decode; C > 1 is a chunked-prefill step).
 
-    x: (B, 1, D); cache: {"k","v"}: (B, S_max, KV, hd) with S_max sharded
-    over 'model'; pos: scalar int, or (B,) per-slot positions.
+    x: (B, C, D); cache: {"k","v"}: (B, S_max, KV, hd) with S_max sharded
+    over 'model'; pos: scalar int, or (B,) per-slot/sequence START
+    positions — the chunk's tokens occupy [pos, pos + C).
     Returns (y, cache').
 
     Off-mesh, attention dispatches the grouped registry `attention` op
-    (compact KV operand, ``kv_len = pos + 1`` masks unwritten cache rows).
-    Under a mesh the grouped-einsum flash-decoding formulation is kept —
-    GSPMD shards its reductions over the sequence axis.
+    (compact KV operand, ``kv_len = pos + C`` masks unwritten cache rows;
+    for C > 1 causal right-alignment against that live extent keeps
+    causality between the chunk's own tokens — the PR-4 chunked-prefill
+    semantics).  Under a mesh the grouped-einsum flash-decoding
+    formulation is kept — GSPMD shards its reductions over the sequence
+    axis.
     """
-    B, _, D = x.shape
+    B, C, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    S_max = cache["k"].shape[1]
-    q = engine.matmul(x, p["wq"], shift=p.get("bq")).reshape(B, 1, H, hd)
-    k = engine.matmul(x, p["wk"], shift=p.get("bk")).reshape(B, 1, KV, hd)
-    v = engine.matmul(x, p["wv"], shift=p.get("bv")).reshape(B, 1, KV, hd)
+    q = engine.matmul(x, p["wq"], shift=p.get("bq")).reshape(B, C, H, hd)
+    k = engine.matmul(x, p["wk"], shift=p.get("bk")).reshape(B, C, KV, hd)
+    v = engine.matmul(x, p["wv"], shift=p.get("bv")).reshape(B, C, KV, hd)
     if cos is not None:
         q = rope_apply(q, cos, sin)
         k = rope_apply(k, cos, sin)
@@ -221,19 +233,19 @@ def gqa_decode(engine: ComputeEngine, p, x, cache, pos, cos, sin, cfg):
     cv = hints.shard(cv, "dp", "model", None, None)
     if not hints.mesh_active():
         # Single-device decode: grouped registry op over the compact cache.
-        y = engine.attention(q.astype(ck.dtype), ck, cv, causal=False,
-                             kv_len=pos + 1)
-        y = y.reshape(B, 1, H * hd).astype(x.dtype)
+        y = engine.attention(q.astype(ck.dtype), ck, cv, causal=C > 1,
+                             kv_len=pos + C)
+        y = y.reshape(B, C, H * hd).astype(x.dtype)
         return engine.matmul(y, p["wo"]), {"k": ck, "v": cv}
-    qg = q.reshape(B, 1, KV, H // KV, hd)
+    qg = q.reshape(B, C, KV, H // KV, hd)
     # Flash-decoding under GSPMD: S_max is sharded; max/sum lower to partial
     # reductions + all-reduce, the weighted sum to partial matmul+all-reduce.
     s = engine.einsum("bqhgd,bkhd->bhgqk", qg, ck,
                       out_dtype=jnp.float32) / (hd ** 0.5)
-    s = _pos_mask(s, pos, 4)
+    s = _pos_mask(s, pos, 4, q_axis=3)
     w = jax.nn.softmax(s, axis=-1)
     y = engine.einsum("bhgqk,bkhd->bqhgd", w, cv, out_dtype=jnp.float32)
-    y = y.reshape(B, 1, H * hd).astype(x.dtype)
+    y = y.reshape(B, C, H * hd).astype(x.dtype)
     return engine.matmul(y, p["wo"]), {"k": ck, "v": cv}
 
 
@@ -300,15 +312,18 @@ def mla_forward(engine: ComputeEngine, p, x, cos, sin, cfg, *,
 def mla_decode(engine: ComputeEngine, p, x, cache, pos, cos, sin, cfg):
     """Absorbed-matmul MLA decode (DeepSeek's inference form).
 
-    Cache holds only (c_kv: (B, S, lora), k_rope: (B, S, rope_d)) — 576
+    x: (B, C, D) — C == 1 for one-token decode; C > 1 writes a chunk at
+    [pos, pos + C) with right-aligned causality between the chunk's
+    tokens (chunked prefill).  Cache holds only (c_kv: (B, S, lora),
+    k_rope: (B, S, rope_d)) — 576
     floats/token/layer — sequence-sharded.  W_uk is absorbed into the query
     (q_nope @ W_uk per head) and W_uv applied after attention, so per-step
     FLOPs are O(S·(lora+rope)·H) instead of O(S·H·(nope+vd)·lora).
     """
     from repro.models.common import rmsnorm
-    B, _, D = x.shape
+    B, C, D = x.shape
     nope, rope_d, lora, vd, H = _mla_split(cfg)
-    q = engine.matmul(x, p["wq"]).reshape(B, 1, H, nope + rope_d)
+    q = engine.matmul(x, p["wq"]).reshape(B, C, H, nope + rope_d)
     q_nope, q_rope = q[..., :nope], q[..., nope:]
     q_rope = rope_apply(q_rope, cos, sin)
     dkv = engine.matmul(x, p["w_dkv"])
@@ -326,11 +341,11 @@ def mla_decode(engine: ComputeEngine, p, x, cache, pos, cos, sin, cfg):
          + engine.einsum("bqhr,bsr->bhqs", q_rope, cr,
                          out_dtype=jnp.float32))
     s = s / ((nope + rope_d) ** 0.5)
-    s = _pos_mask(s, pos, 3)
+    s = _pos_mask(s, pos, 3, q_axis=2)
     w = jax.nn.softmax(s, axis=-1)
     ctx = engine.einsum("bhqs,bsr->bqhr", w, cc,
-                        out_dtype=jnp.float32)         # (B, 1, H, lora)
+                        out_dtype=jnp.float32)         # (B, C, H, lora)
     w_uv = p["w_uv"].reshape(lora, H, vd)
     y = engine.einsum("bqhr,rhv->bqhv", ctx, w_uv, out_dtype=jnp.float32)
-    y = y.reshape(B, 1, H * vd).astype(x.dtype)
+    y = y.reshape(B, C, H * vd).astype(x.dtype)
     return engine.matmul(y, p["wo"]), {"c_kv": cc, "k_rope": cr}

@@ -417,20 +417,27 @@ def forward_prefill(engine: ComputeEngine, cfg, params, *, tokens=None,
 
 
 def decode_hidden(engine: ComputeEngine, cfg, params, caches, token, pos):
-    """One-token decode.  token: (B, 1) int32; pos: scalar int32.
+    """Decode a chunk of C new tokens against the caches.
 
-    Returns (hidden (B, 1, D), new caches).
+    token: (B, C) int32 — C == 1 is plain one-token decode; C > 1 is a
+    chunked-prefill step (attention-cache stacks only: SSM decode is
+    strictly one-token).  pos: scalar int32, or (B,) per-sequence START
+    positions (continuous batching) — the chunk occupies [pos, pos + C).
+
+    Returns (hidden (B, C, D), new caches).
     """
+    C = token.shape[1]
     dt = engine.precision.compute_dtype
     h = embed_lookup(params["embed"], token, dt)
     h = hints.shard(h, "dp", None, None)
     if cfg.n_heads:
         rd = cfg.qk_rope_dim if cfg.is_mla else cfg.head_dim
         if pos.ndim == 0:
-            cos, sin = rope_table(pos[None], rd, cfg.rope_theta)
-        else:  # per-slot positions (continuous batching): (B,) -> (B,1,rd/2)
-            cos, sin = rope_table(pos, rd, cfg.rope_theta)
-            cos, sin = cos[:, None, :], sin[:, None, :]
+            # (C,) absolute positions -> (C, rd/2) tables broadcast over B.
+            positions = pos + jnp.arange(C, dtype=jnp.int32)
+        else:  # per-sequence starts: (B, C) -> (B, C, rd/2)
+            positions = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
+        cos, sin = rope_table(positions, rd, cfg.rope_theta)
     else:
         cos = sin = None
     emb0 = h

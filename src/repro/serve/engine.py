@@ -64,6 +64,7 @@ class ServingEngine(fe.ServingFrontend):
         self._rejected = 0
         self._truncated = 0
         self._steps = 0
+        self._idle_steps = 0
         self._tokens = 0
         self._wall_s = 0.0
         self._latency = fe.LatencyAgg()
@@ -107,6 +108,9 @@ class ServingEngine(fe.ServingFrontend):
         self._admit()
         n_active = sum(r is not None for r in self.active)
         if n_active == 0:
+            # no dispatch when every slot is idle: count it and bail
+            # before paying a full lockstep decode for nothing.
+            self._idle_steps += 1
             return 0
         toks = np.zeros((self.slots, 1), np.int32)
         for s, req in enumerate(self.active):
@@ -153,4 +157,5 @@ class ServingEngine(fe.ServingFrontend):
             items=self._tokens,
             extra={"tokens": self._tokens, "slots": self.slots,
                    "max_len": self.max_len,
+                   "idle_steps": self._idle_steps,
                    "op_counts": dict(self.op_counts or {})})

@@ -22,6 +22,7 @@ from __future__ import annotations
 import abc
 import dataclasses
 import math
+import random
 import time
 from collections import deque
 
@@ -37,7 +38,7 @@ from repro.core.darknet.network import CompileCache
 STATS_KEYS = ("engine", "requests", "steps", "wall_s", "latency_s",
               "throughput")
 REQUEST_KEYS = ("submitted", "completed", "rejected", "truncated")
-LATENCY_KEYS = ("avg", "max")
+LATENCY_KEYS = ("avg", "max", "p50", "p95", "p99")
 
 
 class RejectedRequest(ValueError):
@@ -120,8 +121,15 @@ class ServingFrontend(abc.ABC):
 
 
 class LatencyAgg:
-    """Running per-request latency aggregate (sum/max/count) — O(1) state
-    for long-running servers, no per-request history kept.
+    """Running per-request latency aggregate — O(1) sum/max/count plus a
+    bounded reservoir for tail percentiles, so long-running servers never
+    keep per-request history.
+
+    Percentiles (p50/p95/p99, nearest-rank) come from reservoir sampling
+    (Algorithm R) with a deterministic seeded RNG: up to `reservoir`
+    samples are exact, beyond that each sample survives with probability
+    k/n — an unbiased estimate whose memory never grows, and bit-stable
+    across runs for a fixed sample stream.
 
     Aggregates COMPLETED requests only: a rejected or in-flight request
     has `t_done = NaN`, so its `latency_s` is NaN and one such sample
@@ -129,10 +137,15 @@ class LatencyAgg:
     nan)` and the running sum never recover).  `add` therefore rejects
     non-finite samples loudly instead of absorbing them."""
 
-    def __init__(self):
+    def __init__(self, reservoir: int = 4096):
+        if reservoir < 1:
+            raise ValueError(f"need reservoir >= 1, got {reservoir}")
         self.sum = 0.0
         self.max = 0.0
         self.count = 0
+        self._capacity = reservoir
+        self._samples: list[float] = []
+        self._rng = random.Random(0)
 
     def add(self, latency_s: float) -> None:
         if not math.isfinite(latency_s):
@@ -143,10 +156,27 @@ class LatencyAgg:
         self.sum += latency_s
         self.max = max(self.max, latency_s)
         self.count += 1
+        if len(self._samples) < self._capacity:
+            self._samples.append(latency_s)
+        else:  # Algorithm R: keep with probability capacity/count
+            j = self._rng.randrange(self.count)
+            if j < self._capacity:
+                self._samples[j] = latency_s
+
+    def percentile(self, p: float) -> float:
+        """Nearest-rank percentile over the reservoir; 0.0 when empty."""
+        if not self._samples:
+            return 0.0
+        ordered = sorted(self._samples)
+        rank = math.ceil(p / 100.0 * len(ordered))
+        return ordered[max(0, rank - 1)]
 
     def summary(self) -> dict:
         return {"avg": (self.sum / self.count) if self.count else 0.0,
-                "max": self.max}
+                "max": self.max,
+                "p50": self.percentile(50),
+                "p95": self.percentile(95),
+                "p99": self.percentile(99)}
 
 
 def build_stats(*, engine: str, submitted: int, completed: int,

@@ -1,0 +1,253 @@
+"""Paged KV-cache pool: block allocator + physical storage + gather/scatter.
+
+The slot engine (serve/engine.py) reserves `max_len` KV rows per slot for
+the whole lifetime of a request — a 5-token prompt holds the same memory as
+a 500-token one.  This module is the vLLM-style alternative: one physical
+pool of fixed-size blocks shared by every in-flight sequence.
+
+  * `BlockAllocator` — pure host-side bookkeeping: alloc/extend/free,
+    per-sequence block tables, occupancy/fragmentation stats, and a typed
+    `PoolExhausted` admission signal (a `RejectedRequest` subclass, so the
+    shared `ServingFrontend.run` loop treats exhaustion as a rejection,
+    not a crash).
+  * `PagedKVCache` — the device arrays: per stack entry, a pool shaped
+    (n_layers, n_blocks + 1, block_size, KV, hd).  Block index `n_blocks`
+    is the TRASH block: padded batch rows in a bucketed dispatch point
+    their whole table at it, so their writes land somewhere harmless
+    without any masking inside the compiled step.
+  * `gather_block_cache` / `scatter_chunk` — the jit-traceable bridge
+    between the pool and `decode_hidden`'s dense cache layout: gather a
+    batch's block tables into the compact (n_layers, B, NB*bs, KV, hd)
+    view the registry `attention` op consumes, run the step, then scatter
+    only the newly written rows back.
+
+Dense-GQA stacks only: paging an SSM cache makes no sense (its state is
+O(1) in sequence length) and MLA pools are a follow-up, so `PagedKVCache`
+refuses non-"dense" stack programs loudly.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import stack_program
+from repro.serve import frontend as fe
+
+
+class PoolExhausted(fe.RejectedRequest):
+    """The pool cannot (or can never) cover a request's worst-case block
+    demand.  Subclasses `RejectedRequest` so `ServingFrontend.run` counts
+    it as an admission failure instead of crashing the batch."""
+
+
+class BlockAllocator:
+    """Host-side block bookkeeping for one physical pool.
+
+    Sequences are identified by any hashable id.  `alloc` claims the
+    blocks covering an initial token extent, `extend` grows a sequence to
+    a new total extent, `free` returns every block to the pool.  Blocks
+    are handed out LIFO from a free stack, so allocation order is
+    deterministic and recently freed (cache-warm) blocks are reused first.
+
+    `tokens` tracks the extent each sequence DECLARED, which is what the
+    fragmentation stat measures against: a sequence holding 3 blocks for
+    33 declared tokens wastes 15 slots at block_size=16.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int):
+        if n_blocks < 1 or block_size < 1:
+            raise ValueError(f"need n_blocks >= 1 and block_size >= 1, got "
+                             f"{n_blocks}, {block_size}")
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self._free = list(range(n_blocks - 1, -1, -1))  # pop() yields 0,1,..
+        self._tables: dict = {}
+        self._tokens: dict = {}
+        self.peak_used = 0
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Blocks needed to cover n_tokens rows (ceil division)."""
+        return -(-max(0, n_tokens) // self.block_size)
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    @property
+    def live_tokens(self) -> int:
+        return sum(self._tokens.values())
+
+    def holds(self, seq_id) -> bool:
+        return seq_id in self._tables
+
+    def table(self, seq_id) -> tuple[int, ...]:
+        return tuple(self._tables[seq_id])
+
+    def tokens(self, seq_id) -> int:
+        return self._tokens[seq_id]
+
+    def alloc(self, seq_id, n_tokens: int) -> tuple[int, ...]:
+        """Claim the blocks covering n_tokens for a NEW sequence."""
+        if seq_id in self._tables:
+            raise ValueError(f"sequence {seq_id!r} already allocated")
+        if n_tokens < 1:
+            raise ValueError(f"need n_tokens >= 1, got {n_tokens}")
+        need = self.blocks_for(n_tokens)
+        if need > len(self._free):
+            raise PoolExhausted(
+                f"sequence {seq_id!r} needs {need} blocks, pool has "
+                f"{len(self._free)} free of {self.n_blocks}")
+        self._tables[seq_id] = [self._free.pop() for _ in range(need)]
+        self._tokens[seq_id] = n_tokens
+        self.peak_used = max(self.peak_used, self.used_blocks)
+        return tuple(self._tables[seq_id])
+
+    def extend(self, seq_id, n_tokens: int) -> tuple[int, ...]:
+        """Grow a sequence to n_tokens TOTAL extent; returns the newly
+        claimed blocks (possibly empty).  Shrinking is not supported: a
+        smaller n_tokens is a no-op."""
+        if seq_id not in self._tables:
+            raise KeyError(f"unknown sequence {seq_id!r}")
+        table = self._tables[seq_id]
+        need = self.blocks_for(n_tokens) - len(table)
+        if need > len(self._free):
+            raise PoolExhausted(
+                f"extending sequence {seq_id!r} to {n_tokens} tokens needs "
+                f"{need} more blocks, pool has {len(self._free)} free")
+        new = [self._free.pop() for _ in range(max(0, need))]
+        table.extend(new)
+        self._tokens[seq_id] = max(self._tokens[seq_id], n_tokens)
+        self.peak_used = max(self.peak_used, self.used_blocks)
+        return tuple(new)
+
+    def free(self, seq_id) -> int:
+        """Return every block of a sequence to the pool; returns the count.
+        Raises KeyError on an unknown id — a double-free is a bookkeeping
+        bug upstream and must not be absorbed silently."""
+        if seq_id not in self._tables:
+            raise KeyError(f"unknown sequence {seq_id!r} (double free?)")
+        blocks = self._tables.pop(seq_id)
+        del self._tokens[seq_id]
+        self._free.extend(blocks)
+        return len(blocks)
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of pool blocks currently claimed."""
+        return self.used_blocks / self.n_blocks
+
+    @property
+    def fragmentation(self) -> float:
+        """Fraction of claimed-block token slots not covered by declared
+        extents (internal fragmentation of the last block per sequence)."""
+        cap = self.used_blocks * self.block_size
+        return (cap - self.live_tokens) / cap if cap else 0.0
+
+    def stats(self) -> dict:
+        return {"n_blocks": self.n_blocks, "block_size": self.block_size,
+                "used_blocks": self.used_blocks,
+                "free_blocks": self.free_blocks,
+                "peak_used": self.peak_used,
+                "sequences": len(self._tables),
+                "live_tokens": self.live_tokens,
+                "occupancy": self.occupancy,
+                "fragmentation": self.fragmentation}
+
+
+class PagedKVCache:
+    """Physical paged KV storage for an all-dense GQA stack.
+
+    One pool per stack entry, shaped (n_layers, n_blocks + 1, block_size,
+    KV, hd) — the dense cache layout (serve/kvcache.py) with the sequence
+    axis factored into (block, offset).  The extra block at index
+    `n_blocks` is the trash block for padded batch rows.
+    """
+
+    def __init__(self, cfg, n_blocks: int, block_size: int,
+                 dtype=jnp.float32):
+        prog = stack_program(cfg)
+        if any(kind != "dense" for kind, _ in prog):
+            raise NotImplementedError(
+                f"paged KV pools cover dense GQA stacks only, got "
+                f"{[kind for kind, _ in prog]}")
+        self.cfg = cfg
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self.trash_block = n_blocks
+        KV, hd = cfg.n_kv_heads, cfg.head_dim
+        # One pool per stack entry, mirroring decode_hidden's caches list.
+        self.pools = [
+            {"k": jnp.zeros((n, n_blocks + 1, block_size, KV, hd), dtype),
+             "v": jnp.zeros((n, n_blocks + 1, block_size, KV, hd), dtype)}
+            for _, n in prog]
+
+    def pool_bytes(self, include_trash: bool = False) -> int:
+        """Physical pool size; the trash block is a fixed O(block) overhead
+        excluded from capacity comparisons by default."""
+        total = sum(math.prod(leaf.shape) * leaf.dtype.itemsize
+                    for leaf in jax.tree_util.tree_leaves(self.pools))
+        if include_trash:
+            return total
+        return total * self.n_blocks // (self.n_blocks + 1)
+
+
+def gather_block_cache(pools, block_tables):
+    """Gather per-sequence blocks into `decode_hidden`'s dense cache layout.
+
+    pools: list of {"k","v": (n_layers, n_blocks+1, bs, KV, hd)}
+    block_tables: (B, NB) int32 — row b lists sequence b's blocks in order
+      (padded rows/tails point at the trash block).
+    Returns: list of {"k","v": (n_layers, B, NB*bs, KV, hd)} — the compact
+      grouped layout the registry `attention` op consumes, with row
+      validity enforced downstream by per-sequence `kv_len` masking.
+    """
+    B, NB = block_tables.shape
+
+    def g(p):
+        n, _, bs, KV, hd = p.shape
+        x = p[:, block_tables]                      # (n, B, NB, bs, KV, hd)
+        return x.reshape(n, B, NB * bs, KV, hd)
+
+    return [{k: g(v) for k, v in entry.items()} for entry in pools]
+
+
+def scatter_chunk(pools, caches, block_tables, pos, chunk):
+    """Write the `chunk` rows at [pos_b, pos_b + chunk) of each gathered
+    cache back into the pools.
+
+    caches: the post-step gathered layout (n_layers, B, NB*bs, KV, hd)
+      whose rows [pos_b, pos_b + chunk) were just written by `cache_write`.
+    pos: (B,) int32 per-sequence write start.  Padded rows carry pos=0 and
+      an all-trash table, so their writes collapse into the trash block.
+    chunk: static python int — the bucketed chunk width.
+
+    Active rows touch disjoint (block, offset) pairs (tables never share a
+    real block), so the scatter is conflict-free except inside the trash
+    block, where last-write-wins is fine by construction.
+    """
+    B, NB = block_tables.shape
+    bs = pools[0]["k"].shape[2]
+    tok = pos[:, None] + jnp.arange(chunk, dtype=jnp.int32)[None]   # (B, C)
+    blk = jnp.take_along_axis(block_tables, tok // bs, axis=1)      # (B, C)
+    off = tok % bs
+    flat_blk, flat_off = blk.reshape(-1), off.reshape(-1)           # (B*C,)
+
+    def rows_at(c):
+        # (n, B, S, KV, hd) -> the C written rows per sequence, (n, B, C, ...)
+        def slice_b(cb, pb):
+            return jax.lax.dynamic_slice_in_dim(cb, pb, chunk, axis=1)
+        return jax.vmap(slice_b, in_axes=(1, 0), out_axes=1)(c, pos)
+
+    def s(p, c):
+        rows = rows_at(c)                           # (n, B, C, KV, hd)
+        n, _, _, KV, hd = rows.shape
+        return p.at[:, flat_blk, flat_off].set(
+            rows.reshape(n, B * chunk, KV, hd), mode="drop")
+
+    return [{k: s(p[k], c[k]) for k in p} for p, c in zip(pools, caches)]

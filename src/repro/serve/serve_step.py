@@ -61,5 +61,32 @@ def make_decode_step(engine: ComputeEngine, cfg):
     return decode_step
 
 
+def make_paged_step(engine: ComputeEngine, cfg):
+    """Block-table-aware step over a paged KV pool (serve/kvpool.py).
+
+    Gathers the batch's blocks into the compact (B, S, KV, hd) cache
+    layout, runs `chunk` new tokens through `decode_hidden` with
+    per-sequence (B,) start positions — the registry `attention` op masks
+    each sequence at its own live `kv_len` — then scatters only the newly
+    written rows back into the pools.  One function serves both traffic
+    shapes: chunked prefill dispatches (B=1, chunk=C) and batched decode
+    dispatches (B=batch, chunk=1); the scheduler pads both to bucketed
+    shapes so a `StepCompileCache` bounds the trace count.
+    """
+    from repro.serve import kvpool
+
+    def paged_step(params, pools, block_tables, tokens, pos):
+        chunk = tokens.shape[1]
+        caches = kvpool.gather_block_cache(pools, block_tables)
+        h, new_caches = tfm.decode_hidden(engine, cfg, params, caches,
+                                          tokens, pos)
+        w = tfm.head_weight(params, cfg)
+        logits = lm_head_logits(engine, h, w, vocab_real=cfg.vocab_size)
+        new_pools = kvpool.scatter_chunk(pools, new_caches, block_tables,
+                                         pos, chunk)
+        return logits, new_pools
+    return paged_step
+
+
 def greedy_sample(logits):
     return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)

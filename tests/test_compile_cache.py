@@ -117,3 +117,44 @@ def test_warmup_compiles_every_bucket_eagerly():
     assert cache.trace_count == 2
     cache.run(_x(2))
     assert cache.trace_count == 2                    # no retrace
+
+
+# ------------------------------- function-level StepCompileCache ----------
+
+def test_pick_bucket_and_normalize():
+    from repro.core import normalize_buckets, pick_bucket
+    assert normalize_buckets([8, 2, 2, 4]) == (2, 4, 8)
+    with pytest.raises(ValueError, match="positive"):
+        normalize_buckets([])
+    with pytest.raises(ValueError, match="positive"):
+        normalize_buckets([0, 2])
+    bs = (1, 2, 4)
+    assert [pick_bucket(n, bs) for n in (1, 2, 3, 4)] == [1, 2, 4, 4]
+    with pytest.raises(ValueError, match="exceeds"):
+        pick_bucket(5, bs)
+    with pytest.raises(ValueError, match="n >= 1"):
+        pick_bucket(0, bs)
+
+
+def test_step_compile_cache_counts_traces_not_calls():
+    """The retrace counter bumps only at trace time (a python side effect
+    inside the jit'd fn), never on compiled-path calls — the serving
+    smoke gate's retrace accounting depends on exactly this."""
+    from repro.core import StepCompileCache
+
+    cache = StepCompileCache(lambda x: x * 2, name="double")
+    a2, a4 = jnp.ones(2), jnp.ones(4)
+    np.testing.assert_array_equal(np.asarray(cache(a2)), 2 * np.ones(2))
+    cache(a2)
+    cache(a2)
+    assert (cache.traces, cache.calls) == (1, 3)
+    cache(a4)                                      # new shape: one retrace
+    cache(a4)
+    assert (cache.traces, cache.calls) == (2, 5)
+    cache.record((2,))
+    cache.record((2,))
+    cache.record((4,))
+    st = cache.stats()
+    assert st["name"] == "double"
+    assert st["dispatches"] == {(2,): 2, (4,): 1}
+    assert (st["traces"], st["calls"]) == (2, 5)

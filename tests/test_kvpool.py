@@ -1,0 +1,193 @@
+"""Paged KV pool: block-allocator bookkeeping (unit + property/fuzz churn)
+and the gather/scatter device-side bridge to the dense cache layout."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep (requirements-dev.txt)
+    from hypothesis_stub import given, settings, st
+
+from repro.configs.base import get_arch, reduced
+from repro.serve import kvpool
+from repro.serve.frontend import RejectedRequest
+
+
+# ------------------------------------------------------------ allocator ---
+
+def test_alloc_extend_free_roundtrip():
+    a = kvpool.BlockAllocator(8, 4)
+    t = a.alloc("s0", 6)                 # 6 tokens -> 2 blocks of 4
+    assert len(t) == 2 and a.used_blocks == 2
+    assert a.table("s0") == t and a.tokens("s0") == 6
+    new = a.extend("s0", 9)              # 9 tokens -> 3 blocks, 1 new
+    assert len(new) == 1 and a.used_blocks == 3
+    assert a.table("s0") == t + new
+    assert a.extend("s0", 9) == ()       # no-op growth
+    assert a.extend("s0", 4) == ()       # shrink is a no-op too
+    assert a.tokens("s0") == 9
+    assert a.free("s0") == 3
+    assert a.used_blocks == 0 and a.free_blocks == 8
+
+
+def test_allocation_is_deterministic_lifo():
+    a = kvpool.BlockAllocator(4, 2)
+    assert a.alloc("a", 4) == (0, 1)
+    assert a.alloc("b", 2) == (2,)
+    a.free("a")                          # 0, 1 pushed back on the stack
+    assert a.alloc("c", 4) == (1, 0)     # recently freed blocks reused first
+
+
+def test_double_free_and_unknown_ids_raise():
+    a = kvpool.BlockAllocator(4, 2)
+    a.alloc("s", 2)
+    with pytest.raises(ValueError, match="already allocated"):
+        a.alloc("s", 2)
+    a.free("s")
+    with pytest.raises(KeyError, match="double free"):
+        a.free("s")
+    with pytest.raises(KeyError):
+        a.extend("ghost", 4)
+
+
+def test_pool_exhausted_is_a_rejection():
+    a = kvpool.BlockAllocator(2, 4)
+    with pytest.raises(kvpool.PoolExhausted, match="needs 3 blocks"):
+        a.alloc("big", 12)
+    assert issubclass(kvpool.PoolExhausted, RejectedRequest)
+    a.alloc("s", 8)
+    with pytest.raises(kvpool.PoolExhausted, match="extending"):
+        a.extend("s", 9)
+    # a failed alloc/extend must not leak partial state
+    assert a.used_blocks == 2 and a.table("s") == (0, 1)
+
+
+def test_occupancy_and_fragmentation():
+    a = kvpool.BlockAllocator(4, 8)
+    assert a.occupancy == 0.0 and a.fragmentation == 0.0
+    a.alloc("s", 9)                      # 2 blocks for 9 of 16 slots
+    assert a.occupancy == pytest.approx(0.5)
+    assert a.fragmentation == pytest.approx(7 / 16)
+    st_ = a.stats()
+    assert st_["live_tokens"] == 9 and st_["peak_used"] == 2
+
+
+def _churn(seed: int, n_ops: int = 300, n_blocks: int = 16,
+           block_size: int = 4):
+    """Random alloc/extend/free churn cross-checked against a ground-truth
+    model: no leaks, no double allocation, occupancy always exact."""
+    rng = np.random.default_rng(seed)
+    a = kvpool.BlockAllocator(n_blocks, block_size)
+    model: dict[int, int] = {}           # seq -> declared tokens
+    next_id = 0
+    for _ in range(n_ops):
+        op = rng.integers(3)
+        if op == 0:                      # alloc
+            n = int(rng.integers(1, 3 * block_size))
+            need = a.blocks_for(n)
+            try:
+                t = a.alloc(next_id, n)
+                assert len(t) == need <= n_blocks
+                model[next_id] = n
+            except kvpool.PoolExhausted:
+                assert need > a.free_blocks
+            next_id += 1
+        elif op == 1 and model:          # extend
+            sid = int(rng.choice(list(model)))
+            n = int(rng.integers(1, 5 * block_size))
+            grow = a.blocks_for(n) - len(a.table(sid))
+            try:
+                new = a.extend(sid, n)
+                assert len(new) == max(0, grow)
+                model[sid] = max(model[sid], n)
+            except kvpool.PoolExhausted:
+                assert grow > a.free_blocks
+        elif op == 2 and model:          # free
+            sid = int(rng.choice(list(model)))
+            a.free(sid)
+            del model[sid]
+        # ground truth after every op: tables disjoint, counts exact
+        claimed = [b for s in model for b in a.table(s)]
+        assert len(claimed) == len(set(claimed)), "blocks double-claimed"
+        assert a.used_blocks == len(claimed)
+        assert a.used_blocks + a.free_blocks == n_blocks, "blocks leaked"
+        assert a.live_tokens == sum(model.values())
+        for sid, n in model.items():
+            assert len(a.table(sid)) == a.blocks_for(n)
+    for sid in list(model):
+        a.free(sid)
+    assert a.free_blocks == n_blocks
+
+
+def test_churn_deterministic_seeds():
+    for seed in (0, 1, 2):
+        _churn(seed)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_churn_property(seed):
+    _churn(seed, n_ops=120)
+
+
+# ----------------------------------------------------- gather / scatter ---
+
+def test_paged_cache_rejects_non_dense_stacks():
+    cfg = reduced(get_arch("mamba2-1.3b"))
+    with pytest.raises(NotImplementedError, match="dense"):
+        kvpool.PagedKVCache(cfg, n_blocks=4, block_size=4)
+
+
+def test_paged_cache_shapes_and_bytes():
+    cfg = reduced(get_arch("qwen2-0.5b"))
+    pc = kvpool.PagedKVCache(cfg, n_blocks=6, block_size=4)
+    (k, v), = [(e["k"], e["v"]) for e in pc.pools]
+    assert k.shape == v.shape == (cfg.n_layers, 7, 4, cfg.n_kv_heads,
+                                  cfg.head_dim)
+    assert pc.trash_block == 6
+    # capacity comparisons exclude the trash block
+    assert pc.pool_bytes() * 7 == pc.pool_bytes(include_trash=True) * 6
+
+
+def test_gather_scatter_roundtrip_and_trash_isolation():
+    """Scatter C rows at ragged positions, gather them back bit-identical;
+    padded rows collapse into the trash block without touching real data."""
+    n, nb, bs, KV, hd, C = 2, 5, 4, 2, 3, 4
+    rng = np.random.default_rng(0)
+    pools = [{"k": jnp.asarray(rng.normal(size=(n, nb + 1, bs, KV, hd)),
+                               jnp.float32),
+              "v": jnp.asarray(rng.normal(size=(n, nb + 1, bs, KV, hd)),
+                               jnp.float32)}]
+    tables = jnp.asarray([[0, 2, 3], [1, 4, 5]], jnp.int32)  # row 1 tail=trash
+    pos = jnp.asarray([2, 0], jnp.int32)
+
+    gathered = kvpool.gather_block_cache(pools, tables)
+    assert gathered[0]["k"].shape == (n, 2, 3 * bs, KV, hd)
+    # hand-check one row: seq 0, token 6 lives in block 2's row 2
+    np.testing.assert_array_equal(np.asarray(gathered[0]["k"][:, 0, 6]),
+                                  np.asarray(pools[0]["k"][:, 2, 2]))
+
+    # write recognizable rows at [pos, pos+C) and scatter back
+    marked = [{key: g.at[:, 0, 2:2 + C].set(7.0).at[:, 1, 0:C].set(9.0)
+               for key, g in gathered[0].items()}]
+    out = kvpool.scatter_chunk(pools, marked, tables, pos, C)
+    back = kvpool.gather_block_cache(out, tables)
+    np.testing.assert_array_equal(np.asarray(back[0]["k"][:, 0, 2:2 + C]),
+                                  7.0 * np.ones((n, C, KV, hd), np.float32))
+    np.testing.assert_array_equal(np.asarray(back[0]["v"][:, 1, 0:C]),
+                                  9.0 * np.ones((n, C, KV, hd), np.float32))
+    # untouched rows preserved bit-exactly
+    np.testing.assert_array_equal(np.asarray(back[0]["k"][:, 0, :2]),
+                                  np.asarray(gathered[0]["k"][:, 0, :2]))
+    # blocks owned by neither table row (real block 3 region beyond writes)
+    np.testing.assert_array_equal(np.asarray(out[0]["k"][:, 3]),
+                                  np.asarray(pools[0]["k"][:, 3]))
+
+    # an all-trash padded row leaves every real block untouched
+    pad_tables = jnp.asarray([[0, 2, 3], [5, 5, 5]], jnp.int32)
+    out2 = kvpool.scatter_chunk(pools, marked, pad_tables,
+                                jnp.asarray([2, 0], jnp.int32), C)
+    for blk in (1, 4):                   # seq 1's real blocks: unchanged
+        np.testing.assert_array_equal(np.asarray(out2[0]["k"][:, blk]),
+                                      np.asarray(pools[0]["k"][:, blk]))

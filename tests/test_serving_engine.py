@@ -114,6 +114,27 @@ def test_prompt_overflow_truncates_with_flag_when_configured():
     assert st["requests"]["completed"] == 1
 
 
+def test_idle_step_is_a_counted_noop():
+    """With every slot idle, step() must not dispatch a lockstep decode:
+    it returns 0, bumps the idle counter, and leaves caches untouched."""
+    cfg, params = _setup()
+    eng = ServingEngine(cfg, params, engine=ENGINE, slots=2, max_len=16)
+    before = eng.caches
+    assert eng.step() == 0
+    assert eng.step() == 0
+    st = eng.stats()
+    assert st["idle_steps"] == 2
+    assert st["steps"] == 0                    # no decode was dispatched
+    assert eng.op_counts is None               # never traced anything
+    assert eng.caches is before
+    # after real work, idle steps keep accumulating separately (run()'s
+    # terminating idle probe counts too, plus our explicit one)
+    eng.run([Request(rid=0, prompt=[1, 2], max_new=2)])
+    assert eng.step() == 0
+    st = eng.stats()
+    assert st["idle_steps"] == 4 and st["steps"] > 0
+
+
 def test_bad_overflow_policy_rejected():
     cfg, params = _setup()
     with pytest.raises(ValueError, match="on_overflow"):

@@ -129,6 +129,39 @@ def test_latency_agg_refuses_nonfinite_samples():
     assert (agg.count, agg.sum, agg.max) == (1, 0.25, 0.25)
 
 
+def test_latency_percentiles_nearest_rank():
+    """p50/p95/p99 use nearest-rank over the reservoir — exact while the
+    sample count fits in it, deterministic always."""
+    agg = fe.LatencyAgg()
+    for v in range(1, 101):                 # 1..100 ms
+        agg.add(v / 1000.0)
+    s = agg.summary()
+    assert set(fe.LATENCY_KEYS) == set(s)
+    assert s["p50"] == pytest.approx(0.050)
+    assert s["p95"] == pytest.approx(0.095)
+    assert s["p99"] == pytest.approx(0.099)
+    assert s["p99"] <= s["max"] == pytest.approx(0.100)
+    # empty aggregate reports zeros, not NaNs
+    assert fe.LatencyAgg().summary() == {
+        "avg": 0.0, "max": 0.0, "p50": 0.0, "p95": 0.0, "p99": 0.0}
+
+
+def test_latency_reservoir_bounds_memory_and_stays_deterministic():
+    """Past capacity the reservoir downsamples (memory stays bounded) and
+    two identically-fed aggregates agree bit-for-bit (seeded RNG)."""
+    a, b = fe.LatencyAgg(reservoir=64), fe.LatencyAgg(reservoir=64)
+    for v in range(1000):
+        a.add(v / 1000.0)
+        b.add(v / 1000.0)
+    assert len(a._samples) == 64
+    assert a.summary() == b.summary()
+    assert a.count == 1000                  # avg/max still exact
+    assert a.summary()["max"] == pytest.approx(0.999)
+    # percentile ordering holds even on the downsampled reservoir
+    s = a.summary()
+    assert 0.0 < s["p50"] <= s["p95"] <= s["p99"] <= s["max"]
+
+
 def test_rejection_is_a_dedicated_exception_type():
     """Admission failures raise RejectedRequest (a ValueError subclass, so
     existing callers keep working) on both engines."""
