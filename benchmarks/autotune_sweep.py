@@ -49,6 +49,18 @@ ATTENTION_PROBLEMS = [
 # measurements too.
 ATTENTION_BWD_PROBLEMS = ATTENTION_PROBLEMS[:2]
 
+# Backward ("gemm_bwd") tile problems, derived from PROBLEMS: each forward
+# (m, k, n) GEMM trains through two backward GEMMs — dX (variant-tagged
+# "dx"/"bdx", problem (m, n, k)) and dW ("dw"/"bdw", problem (k, m, n)).
+# Sweeping both variants per forward problem covers exactly the keys a
+# differentiated step of those layers resolves lazily.
+GEMM_BWD_PROBLEMS = [
+    (("b" if op == "bmm" else "") + variant,) +
+    kernel_ops.gemm_bwd_problem(variant, m, k, n)
+    for op, m, k, n in PROBLEMS
+    for variant in ("dx", "dw")
+]
+
 
 def run() -> list[tuple[str, float, str]]:
     rows = []
@@ -83,6 +95,24 @@ def run() -> list[tuple[str, float, str]]:
             (_, sq, skv, h, kv, _) = dims
             rows.append((
                 f"autotune_sweep/attention_{sq}x{skv}_h{h}kv{kv}",
+                pick_ms * 1e3,
+                f"heur={'x'.join(map(str, heur))}:{heur_ms:.3f}ms "
+                f"pick={'x'.join(map(str, pick))}:{pick_ms:.3f}ms "
+                f"source={rec.get('source', '?')} "
+                f"speedup={heur_ms / pick_ms:.2f}x"))
+        for variant, rows_, kdim, cols in GEMM_BWD_PROBLEMS:
+            heur = kernel_ops.default_gemm_bwd_blocks(
+                variant, rows_, kdim, cols, "float32")
+            shapes = (variant, rows_, kdim, cols)
+            pick = pallas.tiles("gemm_bwd", shapes, "float32")
+            key = autotune.key_str("gemm_bwd", shapes, "float32", "pallas")
+            rec = backends.autotune_report().get(key, {})
+            heur_ms = autotune.time_thunk(kernel_ops.gemm_bwd_bench_thunk(
+                variant, rows_, kdim, cols, "float32", heur))
+            pick_ms = autotune.time_thunk(kernel_ops.gemm_bwd_bench_thunk(
+                variant, rows_, kdim, cols, "float32", pick))
+            rows.append((
+                f"autotune_sweep/gemm_bwd_{variant}_{rows_}x{kdim}x{cols}",
                 pick_ms * 1e3,
                 f"heur={'x'.join(map(str, heur))}:{heur_ms:.3f}ms "
                 f"pick={'x'.join(map(str, pick))}:{pick_ms:.3f}ms "

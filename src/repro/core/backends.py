@@ -216,18 +216,20 @@ def unregister_backend(name: str) -> None:
 # custom_jvp: forward passes are untouched, and any differentiation hits
 # the jvp rule — which raises a clear, actionable error at trace time.
 
-@functools.partial(jax.custom_jvp, nondiff_argnums=(0, 1))
-def _nondiff_guard(op, backend, *operands):
+@functools.partial(jax.custom_jvp, nondiff_argnums=(0, 1, 2))
+def _nondiff_guard(op, backend, diff, *operands):
     return operands
 
 
 @_nondiff_guard.defjvp
-def _nondiff_guard_jvp(op, backend, primals, tangents):
+def _nondiff_guard_jvp(op, backend, diff, primals, tangents):
     raise NotImplementedError(
-        f"op {op!r} on backend {backend!r} is not registered as "
-        f"differentiable — jax.grad cannot flow through its kernel.  Use a "
-        f"backend that declares {op!r} in `differentiable` (e.g. 'xla'), "
-        f"or register the backend with a custom-VJP implementation.")
+        f"op {op!r} on backend {backend!r} is not differentiable — "
+        f"jax.grad cannot flow through its kernel.  The backend declares "
+        f"differentiable={sorted(diff)}, which does not include {op!r}.  "
+        f"Use a backend that supports grad for {op!r} (the 'xla' backend "
+        f"differentiates every registry op), or register the backend with "
+        f"a custom-VJP implementation of {op!r}.")
 
 
 def guard_grad(backend: Backend, op: str, *operands):
@@ -238,13 +240,16 @@ def guard_grad(backend: Backend, op: str, *operands):
     `sm_scale` included, since a bias gradient alone reaches the kernel's
     backward too.  None and python scalars pass through untouched (no
     tangent can flow through a non-array).  Free after jit when armed, a
-    no-op when the op supports autodiff."""
+    no-op when the op supports autodiff.  The raised error names the op,
+    the backend, the `differentiable` set it checked, and the xla
+    fallback."""
     if backend.supports_grad(op):
         return operands
     arrays = [x for x in operands if isinstance(x, jax.Array)]
     if not arrays:
         return operands
-    guarded = iter(_nondiff_guard(op, backend.name, *arrays))
+    diff = tuple(sorted(backend.differentiable))
+    guarded = iter(_nondiff_guard(op, backend.name, diff, *arrays))
     return tuple(next(guarded) if isinstance(x, jax.Array) else x
                  for x in operands)
 
@@ -391,7 +396,8 @@ def validate_tiles(op: str, shapes: tuple, dtype, tiles: tuple) -> list[str]:
     """Static legality of a resolved tile plan for one dispatch problem.
 
     Args:
-      op: registry op name (plus the "attention_bwd" backward key).
+      op: registry op name (plus the "attention_bwd" / "gemm_bwd"
+        backward keys).
       shapes: the op's cache-key shapes (see `gemm_dims` /
         `kernel_ops.attention_dims` for the accepted forms).
       dtype: operand dtype (anything `jnp.dtype` accepts).
@@ -541,10 +547,12 @@ def _pallas_attention(q, k, v, *, causal, sm_scale, kv_len=None, ctx):
 
 def gemm_dims(op: str, shapes: tuple) -> tuple[int, int, int] | None:
     """Normalize an op's cache-key shapes to the (m, k, n) GEMM problem the
-    tiled kernels actually run — conv2d maps to its im2col GEMM.  None for
-    ops without a (bm, bk, bn)-shaped tiling (attention tiles by sequence:
-    see `kernel_ops.attention_dims`)."""
-    if op in ("matmul", "bmm"):
+    tiled kernels actually run — conv2d maps to its im2col GEMM, and a
+    "gemm_bwd" key's (variant, rows, contraction, cols) maps to the
+    backward problem's own dims.  None for ops without a (bm, bk, bn)-
+    shaped tiling (attention tiles by sequence: see
+    `kernel_ops.attention_dims`)."""
+    if op in ("matmul", "bmm", "gemm_bwd"):
         return tuple(shapes[-3:])
     if op == "conv2d":
         (b, h, w, c), n, size, stride, pad = shapes
@@ -561,6 +569,10 @@ def _pallas_tile_picker(op: str, shapes: tuple, dtype) -> tuple:
     if op == "attention_bwd":
         return kernel_ops.default_attention_bwd_blocks(
             *kernel_ops.attention_dims(shapes), dtype)
+    if op == "gemm_bwd":
+        variant, rows, kdim, cols = shapes
+        return kernel_ops.default_gemm_bwd_blocks(variant, rows, kdim,
+                                                  cols, dtype)
     dims = gemm_dims(op, shapes)
     if dims is None:
         return ()
@@ -574,6 +586,10 @@ def _pallas_tile_candidates(op: str, shapes: tuple, dtype) -> list[tuple]:
     if op == "attention_bwd":
         return kernel_ops.candidate_attention_bwd_blocks(
             *kernel_ops.attention_dims(shapes), dtype)
+    if op == "gemm_bwd":
+        variant, rows, kdim, cols = shapes
+        return kernel_ops.candidate_gemm_bwd_blocks(variant, rows, kdim,
+                                                    cols, dtype)
     dims = gemm_dims(op, shapes)
     if dims is None:
         return []
@@ -590,6 +606,11 @@ def _pallas_tile_bench(op: str, shapes: tuple, dtype, tiles: tuple,
         return kernel_ops.attention_bwd_bench_thunk(
             *kernel_ops.attention_dims(shapes), dtype, tiles,
             interpret=interpret)
+    if op == "gemm_bwd":
+        variant, rows, kdim, cols = shapes
+        return kernel_ops.gemm_bwd_bench_thunk(variant, rows, kdim, cols,
+                                               dtype, tiles,
+                                               interpret=interpret)
     dims = gemm_dims(op, shapes)
     if dims is None:
         return None
@@ -671,10 +692,12 @@ def _xla_attention(q, k, v, *, causal, sm_scale, kv_len=None, ctx):
             .reshape(B, Sq, H, D).astype(q.dtype))
 
 
-# The flash attention kernel carries a custom VJP (backward kernels in
-# kernels/flash_attention.py) — attention trains on the kernel path.  The
-# GEMM kernels have no VJP yet: differentiating them raises the clear
-# capability error instead of pallas_call's bare AssertionError.
+# Every pallas op carries a custom VJP: flash attention's backward kernels
+# live in kernels/flash_attention.py, the GEMM backward kernels (dX/dW,
+# shared by matmul, bmm and conv2d-as-im2col — im2col itself backpropagates
+# through a col2im scatter in kernels/common.py) in kernels/gemm.py, with
+# backward tiles resolved lazily under "gemm_bwd"/"attention_bwd" autotune
+# keys.  The full op set trains on the kernel path.
 register_backend("pallas", {
     "matmul": _pallas_matmul,
     "bmm": _pallas_bmm,
@@ -683,7 +706,7 @@ register_backend("pallas", {
 }, tile_picker=_pallas_tile_picker,
     tile_candidates=_pallas_tile_candidates,
     tile_bench=_pallas_tile_bench,
-    differentiable=("attention",))
+    differentiable=("matmul", "bmm", "conv2d", "attention"))
 
 register_backend("xla", {
     "matmul": _xla_matmul,

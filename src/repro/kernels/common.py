@@ -13,6 +13,8 @@ Darknet layer needs: plain bias (scale=1, shift=bias), folded batch-norm
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -25,11 +27,17 @@ def apply_act(x, act: str):
     if act == "linear":
         return x
     if act == "relu":
-        return jnp.maximum(x, 0.0)
+        # `where` (not jnp.maximum) so autodiff's subgradient at exactly 0
+        # is 0 on every backend — matching `act_deriv`'s kernel residual
+        # (maximum splits ties 0.5/0.5).
+        return jnp.where(x > 0, x, 0.0)
     if act == "leaky":
         return jnp.where(x > 0, x, _LEAKY_SLOPE * x)
     if act == "silu":
-        return x * (1.0 / (1.0 + jnp.exp(-x)))
+        # jax.nn.sigmoid (logistic): same values as 1/(1+exp(-x)), but its
+        # autodiff is overflow-safe — the naive form's gradient is
+        # inf/inf = NaN once exp(-x) overflows (|x| > ~88 in fp32).
+        return x * jax.nn.sigmoid(x)
     if act == "gelu":
         # tanh approximation, matches jax.nn.gelu(approximate=True)
         c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
@@ -38,6 +46,30 @@ def apply_act(x, act: str):
 
 
 ACTIVATIONS = ("linear", "relu", "leaky", "silu", "gelu")
+
+
+def act_deriv(x, act: str):
+    """d act(x) / dx, elementwise — the `act'(pre-act)` residual the fused
+    GEMM's custom VJP emits from its forward kernel (docs/engine_api.md,
+    "residual layout contract").  Subgradient at relu/leaky kinks follows
+    `apply_act`'s `where` branches (0 resp. slope at exactly 0), so the
+    kernel backward matches jax.grad of the jnp formulation bit-for-bit."""
+    if act == "linear":
+        return jnp.ones_like(x)
+    if act == "relu":
+        return jnp.where(x > 0, 1.0, 0.0).astype(x.dtype)
+    if act == "leaky":
+        return jnp.where(x > 0, 1.0, _LEAKY_SLOPE).astype(x.dtype)
+    if act == "silu":
+        s = 1.0 / (1.0 + jnp.exp(-x))
+        return s * (1.0 + x * (1.0 - s))
+    if act == "gelu":
+        c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+        inner = c * (x + 0.044715 * x**3)
+        t = jnp.tanh(inner)
+        return (0.5 * (1.0 + t)
+                + 0.5 * x * (1.0 - t**2) * c * (1.0 + 3 * 0.044715 * x**2))
+    raise ValueError(f"unknown activation: {act!r}")
 
 
 def epilogue(acc, scale, shift, act: str):
@@ -50,12 +82,24 @@ def epilogue(acc, scale, shift, act: str):
     return apply_act(y, act)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
 def im2col(x, kh: int, kw: int, stride: int, pad: int):
     """x: (B, H, W, C) -> patches (B, OH, OW, kh*kw*C).
 
     The canonical Darknet conv lowering: materialize patches, GEMM on the
     engine.  Shared by every backend's im2col-based conv2d op.
+
+    Carries a custom VJP whose backward is a col2im scatter-add (the
+    `deconv2d` idiom): patch cotangents accumulate back onto the input
+    positions each tap read.  This keeps conv2d's dL/dinput free of
+    `conv_general_dilated` equations — JAX's native transpose of
+    `conv_general_dilated_patches` would emit one outside any registry
+    dispatch scope, failing the R002 backward-trace gate.
     """
+    return _im2col_fwd_impl(x, kh, kw, stride, pad)
+
+
+def _im2col_fwd_impl(x, kh, kw, stride, pad):
     patches = jax.lax.conv_general_dilated_patches(
         x, (kh, kw), (stride, stride), [(pad, pad), (pad, pad)],
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
@@ -66,3 +110,35 @@ def im2col(x, kh: int, kw: int, stride: int, pad: int):
     patches = patches.reshape(b, oh, ow, c, kh * kw)
     patches = jnp.swapaxes(patches, -1, -2)  # (..., kh*kw, C)
     return patches.reshape(b, oh, ow, kh * kw * c)
+
+
+def col2im(g, x_shape: tuple, kh: int, kw: int, stride: int, pad: int):
+    """Transpose of `im2col`: scatter patch cotangents g (B, OH, OW,
+    kh*kw*C) back onto dx (B, H, W, C).  Static python loop over the
+    (kh, kw) taps, each a strided slice-add — every output position
+    (i, j) of tap (ki, kj) read padded-input position (i*stride + ki,
+    j*stride + kj), so its cotangent accumulates back there."""
+    b, h, w, c = x_shape
+    _, oh, ow, _ = g.shape
+    g = g.reshape(b, oh, ow, kh, kw, c).astype(jnp.float32)
+    dx = jnp.zeros((b, h + 2 * pad, w + 2 * pad, c), jnp.float32)
+    for ki in range(kh):
+        for kj in range(kw):
+            dx = dx.at[:, ki:ki + oh * stride:stride,
+                       kj:kj + ow * stride:stride, :].add(g[:, :, :, ki, kj])
+    return dx[:, pad:pad + h, pad:pad + w, :]
+
+
+def _im2col_vjp_fwd(x, kh, kw, stride, pad):
+    # Residual: a zero-size array whose STATIC shape/dtype carry what the
+    # backward needs (residual pytrees may only hold arrays, not dtypes).
+    ref = jnp.zeros((0,) + x.shape[1:], x.dtype)
+    return _im2col_fwd_impl(x, kh, kw, stride, pad), ref
+
+
+def _im2col_vjp_bwd(kh, kw, stride, pad, ref, g):
+    x_shape = (g.shape[0],) + ref.shape[1:]
+    return (col2im(g, x_shape, kh, kw, stride, pad).astype(ref.dtype),)
+
+
+im2col.defvjp(_im2col_vjp_fwd, _im2col_vjp_bwd)

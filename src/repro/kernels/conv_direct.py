@@ -13,6 +13,13 @@ Taps are a python-unrolled loop of static slices — the same "operand
 window streams past a resident accumulator" structure as the GEMM engine.
 Stride 1, 'VALID' on a pre-padded input (ops wrapper pads).
 Validated against jax.lax.conv in interpret mode (tests/test_kernels_conv.py).
+
+FORWARD-ONLY: this kernel carries no custom VJP (differentiating it dies
+inside pallas_call).  Training conv goes through the im2col GEMM path
+(kernels/common.py im2col + kernels/gemm.py — both custom-VJP'd), which
+is what the built-in pallas backend registers.  A backend registering
+THIS kernel as its conv2d must exclude "conv2d" from `differentiable` so
+the engine's guard raises the clear capability error instead.
 """
 from __future__ import annotations
 

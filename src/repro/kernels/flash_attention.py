@@ -460,11 +460,17 @@ def _flash_vjp_fwd(cfg: _Config, q, k, v, kvl):
 
 
 def _flash_vjp_bwd(cfg: _Config, res, do):
-    q, k, v, kvl, o, lse = res
-    # Delta term: rowsum(dO ∘ O) — elementwise O(S·d), no kernel needed.
-    # Fully-masked rows have O == 0, so delta == 0 there by construction.
-    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
-    dq, dk, dv = _backward(cfg, q, k, v, kvl, do, lse, delta)
+    # VJP rules trace OUTSIDE the forward dispatch's named scope, so the
+    # backward self-scopes: the R002 trace-lint rule requires every dense
+    # contraction in a backward jaxpr to sit under a repro.op.* marker.
+    with jax.named_scope("repro.op.attention_bwd"):
+        q, k, v, kvl, o, lse = res
+        # Delta term: rowsum(dO ∘ O) — elementwise O(S·d), no kernel
+        # needed.  Fully-masked rows have O == 0, so delta == 0 there by
+        # construction.
+        delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32),
+                        axis=-1)
+        dq, dk, dv = _backward(cfg, q, k, v, kvl, do, lse, delta)
     # kv_len is integer-valued: its cotangent is the symbolic zero float0.
     kvl_ct = (None if kvl is None
               else np.zeros(kvl.shape, dtype=jax.dtypes.float0))

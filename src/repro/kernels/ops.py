@@ -194,6 +194,86 @@ def bench_thunk(op: str, m: int, k: int, n: int, dtype,
     return lambda: matmul(x, w, bm=bm, bk=bk, bn=bn, interpret=interpret)
 
 
+# ------------------------------------------------ GEMM backward tiles ---
+# The custom-VJP backward kernels (kernels/gemm.py) re-tile the two
+# backward GEMMs — dX = dY . W^T and dW = X^T . dY — as problems in their
+# own right, keyed ("gemm_bwd", (variant, rows, contraction, cols), dtype,
+# backend) where the dims are the BACKWARD problem's own (m, k, n) (so the
+# generic (bm, bk, bn) machinery applies verbatim).  Variants: "dx"/"dw"
+# for matmul-shaped calls, "bdx"/"bdw" for bmm.  Keys resolve lazily at
+# backward-trace time — inference never touches (or measures) them.
+
+GEMM_BWD_VARIANTS = ("dx", "dw", "bdx", "bdw")
+
+# Re-exported: maps an engine-layout (m, k, n) to a variant's own
+# (rows, contraction, cols) — callers building "gemm_bwd" keys use it.
+gemm_bwd_problem = gemm_kernel.gemm_bwd_problem
+
+
+def _gemm_bwd_base_op(variant: str) -> str:
+    if variant not in GEMM_BWD_VARIANTS:
+        raise ValueError(f"unknown gemm_bwd variant {variant!r}; expected "
+                         f"one of {GEMM_BWD_VARIANTS}")
+    return "bmm" if variant.startswith("b") else "matmul"
+
+
+def default_gemm_bwd_blocks(variant: str, rows: int, kdim: int, cols: int,
+                            dtype) -> tuple[int, int, int]:
+    """Heuristic (bm, bk, bn) for a backward GEMM: the backward problem is
+    a plain GEMM over its own (rows, contraction, cols), so the forward
+    heuristic applies directly — with the bmm clamp for the batched
+    "bdx"/"bdw" variants (the batch grid dim multiplies live tiles)."""
+    return default_blocks(_gemm_bwd_base_op(variant), rows, kdim, cols,
+                          dtype)
+
+
+def candidate_gemm_bwd_blocks(variant: str, rows: int, kdim: int, cols: int,
+                              dtype) -> list[tuple[int, int, int]]:
+    """Candidate set for measured gemm_bwd autotuning: the forward GEMM
+    sweep (heuristic + axis-wise neighbors, MXU-aligned, VMEM
+    working-set-filtered) on the backward problem's own dims."""
+    return candidate_blocks(_gemm_bwd_base_op(variant), rows, kdim, cols,
+                            dtype)
+
+
+def gemm_bwd_bench_thunk(variant: str, rows: int, kdim: int, cols: int,
+                         dtype, tiles: tuple[int, int, int], *,
+                         interpret: bool = True):
+    """Measurement unit for a gemm_bwd candidate: one compiled call of the
+    RAW backward kernel with pinned tiles on the padded problem.  Timing
+    the kernel directly (not `jax.grad` of the forward) keeps the timed
+    trace out of the autotune cache — resolving the key being measured
+    from inside its own measurement would deadlock on the process lock.
+    Operand layouts per variant (backward dims rows/kdim/cols pad with
+    bm/bk/bn respectively):
+
+      dx : dY (M, N) . W^T  with (rows, kdim, cols) = (M, N, K)
+      dw : X^T . dY (M, N)  with (rows, kdim, cols) = (K, M, N)
+      bdx/bdw: the batched forms, benched single-batch like `bench_thunk`.
+    """
+    _gemm_bwd_base_op(variant)
+    bm, bk, bn = tiles
+    rp = _round_up(rows, bm)
+    kp = _round_up(kdim, bk)
+    cp = _round_up(cols, bn)
+    kw = dict(bm=bm, bk=bk, bn=bn, interpret=interpret)
+    if variant == "dx":
+        dy, w = jnp.zeros((rp, kp), dtype), jnp.zeros((cp, kp), dtype)
+        fn = jax.jit(lambda a, b: gemm_kernel.gemm_bwd_dx(a, b, **kw))
+        return lambda: fn(dy, w)
+    if variant == "dw":
+        x, dy = jnp.zeros((kp, rp), dtype), jnp.zeros((kp, cp), dtype)
+        fn = jax.jit(lambda a, b: gemm_kernel.gemm_bwd_dw(a, b, **kw))
+        return lambda: fn(x, dy)
+    if variant == "bdx":
+        dy, w = jnp.zeros((1, rp, kp), dtype), jnp.zeros((1, cp, kp), dtype)
+        fn = jax.jit(lambda a, b: gemm_kernel.bmm_bwd_dx(a, b, **kw))
+        return lambda: fn(dy, w)
+    x, dy = jnp.zeros((1, kp, rp), dtype), jnp.zeros((1, kp, cp), dtype)
+    fn = jax.jit(lambda a, b: gemm_kernel.bmm_bwd_dw(a, b, **kw))
+    return lambda: fn(x, dy)
+
+
 # ------------------------------------------------- attention (bq, bk) ---
 # The attention op tiles by SEQUENCE, not (bm, bk, bn): (bq, bk) are the
 # query/key tile lengths the flash kernel streams through VMEM.  The same
@@ -489,11 +569,19 @@ def _cached_blocks(op: str, m: int, k: int, n: int, dtype, interpret: bool
 
 @functools.partial(
     jax.jit,
-    static_argnames=("act", "out_dtype", "bm", "bk", "bn", "interpret"))
+    static_argnames=("act", "out_dtype", "bm", "bk", "bn", "interpret",
+                     "bwd_dx", "bwd_dw"))
 def matmul(x, w, scale=None, shift=None, *, act: str = "linear",
            out_dtype=None, bm: int = 0, bk: int = 0, bn: int = 0,
-           interpret: bool = True):
-    """Fused GEMM on the compute engine, arbitrary (M, K) x (K, N)."""
+           interpret: bool = True, bwd_dx: tuple = (), bwd_dw: tuple = ()):
+    """Fused GEMM on the compute engine, arbitrary (M, K) x (K, N).
+
+    DIFFERENTIABLE end-to-end: the kernel carries a custom VJP (backward
+    GEMM kernels under lazily-resolved ``"gemm_bwd"`` autotune keys — the
+    unpadded (m, k, n) threads through as the key), and this wrapper's
+    pad/slice are gradient-transparent.  ``bwd_dx``/``bwd_dw`` pin the
+    backward (bm, bk, bn) plans; () resolves them at backward-trace time.
+    """
     m, k = x.shape
     _, n = w.shape
     out_dtype = out_dtype or x.dtype
@@ -506,15 +594,22 @@ def matmul(x, w, scale=None, shift=None, *, act: str = "linear",
     bp = jnp.pad(shift, (0, np_ - n)) if shift is not None else None
     out = gemm_kernel.gemm(xp, wp, scale=sp, shift=bp, act=act,
                            out_dtype=out_dtype, bm=bm, bk=bk, bn=bn,
-                           interpret=interpret)
+                           interpret=interpret, bwd_key=(m, k, n),
+                           bwd_dx=bwd_dx, bwd_dw=bwd_dw)
     return out[:m, :n]
 
 
 @functools.partial(
-    jax.jit, static_argnames=("out_dtype", "bm", "bk", "bn", "interpret"))
+    jax.jit, static_argnames=("out_dtype", "bm", "bk", "bn", "interpret",
+                              "bwd_dx", "bwd_dw"))
 def bmm(x, w, *, out_dtype=None, bm: int = 0, bk: int = 0, bn: int = 0,
-        interpret: bool = True):
-    """Batched GEMM (B, M, K) @ (B, K, N) on the engine."""
+        interpret: bool = True, bwd_dx: tuple = (), bwd_dw: tuple = ()):
+    """Batched GEMM (B, M, K) @ (B, K, N) on the engine.
+
+    DIFFERENTIABLE via the same custom-VJP machinery as `matmul` —
+    backward keys are variant-tagged "bdx"/"bdw" (batch stays out of the
+    key, like the forward "bmm" key).
+    """
     b, m, k = x.shape
     _, _, n = w.shape
     out_dtype = out_dtype or x.dtype
@@ -524,5 +619,6 @@ def bmm(x, w, *, out_dtype=None, bm: int = 0, bk: int = 0, bn: int = 0,
     xp = jnp.pad(x, ((0, 0), (0, mp - m), (0, kp - k)))
     wp = jnp.pad(w, ((0, 0), (0, kp - k), (0, np_ - n)))
     out = gemm_kernel.bmm(xp, wp, out_dtype=out_dtype, bm=bm, bk=bk, bn=bn,
-                          interpret=interpret)
+                          interpret=interpret, bwd_key=(m, k, n),
+                          bwd_dx=bwd_dx, bwd_dw=bwd_dw)
     return out[:, :m, :n]

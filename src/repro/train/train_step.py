@@ -1,11 +1,19 @@
-"""Training step: microbatched grad accumulation, clipping, AdamW.
+"""Training steps: microbatched grad accumulation, clipping, AdamW.
 
-The step is a single SPMD program: batch enters dp-sharded, GSPMD inserts
+The LM step is a single SPMD program: batch enters dp-sharded, GSPMD inserts
 the gradient reduce-scatter/all-reduce implied by the param shardings (plain
 replicated params -> one all-reduce; FSDP params -> reduce-scatter +
 all-gather pair that XLA's latency-hiding scheduler overlaps with compute on
 real hardware).  Microbatching runs as a lax.scan over equal slices of the
 per-replica batch, keeping activation memory at 1/M for M microbatches.
+
+`make_cnn_train_step` is the Darknet counterpart: cross-entropy over a
+planned `Network.apply` forward.  Both builders are backend-agnostic — every
+registry op (matmul, bmm, conv2d, attention) is differentiable on every
+built-in backend, pallas included (custom-VJP kernels, docs/engine_api.md),
+so there are no backend-conditional gradient paths: the same differentiated
+trace dispatches whichever backend the engine was built with, forward AND
+backward.
 """
 from __future__ import annotations
 
@@ -72,5 +80,42 @@ def make_train_step(engine: ComputeEngine, cfg, ocfg: opt.AdamWConfig, *,
         if grad_compression:
             return params, opt_state, err, metrics
         return params, opt_state, metrics
+
+    return train_step
+
+
+def cnn_loss_fn(net, params, images, labels):
+    """Mean cross-entropy of a planned Darknet classifier.
+
+    `net.apply` ends in the cfg's own [softmax] layer, so the loss takes
+    the log of probabilities (clamped away from 0 — padding classes and
+    early training can emit exact zeros).  Fully differentiable through
+    the engine's registry ops on any backend; the pallas path runs its
+    custom-VJP conv/GEMM kernels backward.
+    """
+    probs = net.apply(params, images).astype(jnp.float32)
+    logp = jnp.log(jnp.clip(probs, 1e-30, 1.0))
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def make_cnn_train_step(net, ocfg: opt.AdamWConfig):
+    """Returns train_step(params, opt_state, (images, labels)) ->
+    (params, opt_state, metrics) for a planned Darknet `Network`.
+
+    One `jax.value_and_grad` of `cnn_loss_fn` — no microbatching (CNN
+    activations are small) and no backend-conditional grad path: the
+    engine bound to `net` dispatches its own kernels in forward and
+    backward alike.
+    """
+
+    def train_step(params, opt_state, batch):
+        images, labels = batch
+        lval, grads = jax.value_and_grad(
+            lambda p: cnn_loss_fn(net, p, images, labels))(params)
+        grads, gnorm = opt.clip_by_global_norm(grads, ocfg.clip_norm)
+        params, opt_state, lr = opt.adamw_update(ocfg, grads, opt_state,
+                                                 params)
+        return params, opt_state, {"loss": lval, "grad_norm": gnorm,
+                                   "lr": lr, "step": opt_state["step"]}
 
     return train_step

@@ -460,6 +460,116 @@ def test_attention_measured_pick_matches_heuristic_numerics():
                                rtol=1e-6, atol=1e-6)
 
 
+# ------------------------------------------------ GEMM backward tiles ---
+
+def _matmul_grad(m=48, k=40, n=24):
+    eng = make_engine("pallas")
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((m, k)),
+                    jnp.float32)
+    w = jnp.asarray(np.random.default_rng(1).standard_normal((k, n)),
+                    jnp.float32)
+    return jax.grad(
+        lambda x, w: (eng.matmul(x, w, act="leaky")
+                      .astype(jnp.float32) ** 2).sum(),
+        argnums=(0, 1))(x, w)
+
+
+def test_gemm_bwd_candidates_mxu_aligned_and_vmem_filtered():
+    """gemm_bwd candidates ride the forward GEMM sweep on the backward
+    problem's own dims: heuristic pick first, MXU-aligned, working-set
+    filtered, with the bmm clamp on the batched variants."""
+    for variant, rows, kdim, cols in [("dx", 512, 128, 288),
+                                      ("dw", 288, 512, 128),
+                                      ("bdx", 128, 128, 128),
+                                      ("bdw", 333, 177, 99)]:
+        base = kernel_ops.default_gemm_bwd_blocks(variant, rows, kdim,
+                                                  cols, "float32")
+        cands = kernel_ops.candidate_gemm_bwd_blocks(variant, rows, kdim,
+                                                     cols, "float32")
+        assert cands[0] == base
+        assert len(cands) == len(set(cands)) >= 2
+        for bm, bk, bn in cands:
+            assert bm % 8 == 0 and bk % 128 == 0 and bn % 128 == 0
+            assert kernel_ops._working_set(
+                bm, bk, bn, 4) <= kernel_ops._VMEM_BUDGET
+        if variant.startswith("b"):       # the bmm clamp applies
+            assert base == kernel_ops.default_blocks(
+                "bmm", rows, kdim, cols, "float32")
+
+
+def test_gemm_bwd_variant_rejected():
+    with pytest.raises(ValueError, match="variant"):
+        kernel_ops.default_gemm_bwd_blocks("nope", 8, 128, 128, "float32")
+
+
+def test_gemm_bwd_keys_measured_only_under_grad():
+    """Inference resolves just the forward "matmul" key; differentiating
+    the same problem lazily adds (and measures) one "gemm_bwd" key per
+    backward GEMM — the dX and dW problems, keyed on their OWN dims."""
+    backends.set_autotune_policy("measure")
+    _matmul()
+    assert not [k for k in backends.autotune_report()
+                if k.startswith('["gemm_bwd"')]
+    _matmul_grad()
+    bwd = {k: r for k, r in backends.autotune_report().items()
+           if k.startswith('["gemm_bwd"')}
+    assert len(bwd) == 2
+    variants = {json.loads(k)[1][0] for k in bwd}
+    assert variants == {"dx", "dw"}
+    with open(autotune.table_path()) as f:
+        table = json.load(f)
+    for key, rec in bwd.items():
+        assert rec["source"] == "measured"
+        assert len(tuple(rec["pick"])) == 3
+        assert tuple(rec["pick"]) in {tuple(c) for c, _ in
+                                      rec["candidates_timed"]}
+        assert key in table["entries"]
+
+
+def test_gemm_bwd_persisted_roundtrip_zero_retiming(monkeypatch):
+    """A fresh process serves every gemm_bwd pick from the per-device
+    table with zero measurements — the --check-persisted property for the
+    GEMM backward key space."""
+    backends.set_autotune_policy("measure")
+    _matmul_grad()
+    rep = {k: r for k, r in backends.autotune_report().items()
+           if k.startswith('["gemm_bwd"')}
+    assert len(rep) == 2
+
+    _fresh_process()
+    jax.clear_caches()           # a fresh process also has no jit cache
+
+    def _no_timing(*a, **kw):
+        raise AssertionError("re-timed a persisted gemm_bwd pick")
+    monkeypatch.setattr(autotune, "time_thunk", _no_timing)
+
+    _matmul_grad()
+    st = backends.cache_stats()
+    assert st["measured"] == 0 and st["persisted"] == 3  # fwd + dx + dw
+    for key, rec in rep.items():
+        got = backends.autotune_report()[key]
+        assert got["pick"] == rec["pick"] and got["source"] == "persisted"
+
+
+def test_gemm_bwd_measured_pick_matches_heuristic_numerics():
+    """Backward tiling only changes the schedule: gradients under the
+    measured picks equal gradients under the heuristic picks (odd dims
+    force the gcd-clamped padded path too).  Max-relative tolerance, not
+    elementwise: which candidate wins the timing varies with machine
+    load, and a different tile shape can shift fp32 reduction order by
+    one ulp at the gradient's magnitude."""
+    backends.set_autotune_policy("heuristic")
+    want = _matmul_grad(m=33, k=41, n=17)
+    backends.clear_tile_cache()
+    jax.clear_caches()
+    backends.set_autotune_policy("measure")
+    got = _matmul_grad(m=33, k=41, n=17)
+    for a, b in zip(got, want):
+        a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+        rel = np.abs(a - b).max() / (np.abs(b).max() + 1e-12)
+        assert rel <= 1e-5, rel
+
+
 # ------------------------------------------------------- network wiring ---
 
 def test_compile_measured_warmup_pass_and_report():

@@ -267,14 +267,11 @@ def test_causal_attention_rejects_more_queries_than_keys():
 def test_differentiable_defaults_and_pallas_declaration():
     """A backend registered without `differentiable` supports grad on all
     its ops (the right default for jnp backends); the built-in pallas
-    backend declares exactly the op with a custom VJP — attention."""
-    for name in ("xla", "ref"):
+    backend now declares the FULL op set — every kernel carries a custom
+    VJP (flash attention + the gemm_bwd GEMM backward kernels)."""
+    for name in ("xla", "ref", "pallas"):
         be = get_backend(name)
         assert all(be.supports_grad(op) for op in be.ops)
-    pallas = get_backend("pallas")
-    assert pallas.supports_grad("attention")
-    assert not pallas.supports_grad("matmul")
-    assert not pallas.supports_grad("conv2d")
 
 
 def test_differentiable_must_name_registered_ops():
@@ -285,28 +282,59 @@ def test_differentiable_must_name_registered_ops():
     backends.unregister_backend("bogus-diff")
 
 
-def test_nondifferentiable_pallas_gemm_raises_clear_error():
-    """Differentiating a pallas GEMM (no VJP) fails with the capability
-    error naming the op and backend — not the bare AssertionError
-    pallas_call used to die with deep inside autodiff."""
-    eng = make_engine("pallas")
-    x, w = _rand(0, (16, 16)), _rand(1, (16, 16))
-    with pytest.raises(NotImplementedError,
-                       match="'matmul' on backend 'pallas'"):
-        jax.grad(lambda x: eng.matmul(x, w).sum())(x)
-    # the guard covers the epilogue operands too: a gradient flowing ONLY
-    # through the bias/folded-BN shift must hit the same clear error
-    b = _rand(2, (16,))
-    with pytest.raises(NotImplementedError,
-                       match="'matmul' on backend 'pallas'"):
-        jax.grad(lambda b: eng.matmul(x, w, shift=b).sum())(b)
-    with pytest.raises(NotImplementedError,
-                       match="'matmul' on backend 'pallas'"):
-        jax.grad(lambda s: eng.matmul(x, w, scale=s).sum())(b)
-    # forward dispatch is untouched by the armed guard
-    np.testing.assert_allclose(np.asarray(eng.matmul(x, w)),
-                               np.asarray(make_engine("ref").matmul(x, w)),
-                               rtol=2e-4, atol=2e-4)
+def test_nondifferentiable_backend_gemm_raises_clear_error():
+    """Differentiating an op the backend does NOT declare differentiable
+    (a VJP-less kernel registration) fails with the capability error —
+    not the bare AssertionError pallas_call used to die with deep inside
+    autodiff.  Registered here on purpose: the built-in pallas backend
+    now differentiates its whole op set, so the guard is exercised via a
+    deliberately grad-less registration (the conv_direct.py situation)."""
+    xla = get_backend("xla")
+    register_backend("nodiff-gemm", dict(xla.ops), differentiable=(),
+                     overwrite=True)
+    try:
+        eng = make_engine("nodiff-gemm")
+        x, w = _rand(0, (16, 16)), _rand(1, (16, 16))
+        with pytest.raises(NotImplementedError,
+                           match="'matmul' on backend 'nodiff-gemm'"):
+            jax.grad(lambda x: eng.matmul(x, w).sum())(x)
+        # the guard covers the epilogue operands too: a gradient flowing
+        # ONLY through the bias/folded-BN shift must hit the same error
+        b = _rand(2, (16,))
+        with pytest.raises(NotImplementedError,
+                           match="'matmul' on backend 'nodiff-gemm'"):
+            jax.grad(lambda b: eng.matmul(x, w, shift=b).sum())(b)
+        with pytest.raises(NotImplementedError,
+                           match="'matmul' on backend 'nodiff-gemm'"):
+            jax.grad(lambda s: eng.matmul(x, w, scale=s).sum())(b)
+        # forward dispatch is untouched by the armed guard
+        np.testing.assert_allclose(
+            np.asarray(eng.matmul(x, w)),
+            np.asarray(make_engine("ref").matmul(x, w)),
+            rtol=2e-4, atol=2e-4)
+    finally:
+        backends.unregister_backend("nodiff-gemm")
+
+
+def test_nondifferentiable_error_is_actionable():
+    """The capability error names the op, the backend, the
+    `differentiable` set it checked, and points at the xla fallback — a
+    user hitting it knows exactly which dispatch tripped and what to do."""
+    xla = get_backend("xla")
+    register_backend("partial-diff", dict(xla.ops),
+                     differentiable=("attention", "bmm"), overwrite=True)
+    try:
+        eng = make_engine("partial-diff")
+        x, w = _rand(0, (16, 16)), _rand(1, (16, 16))
+        with pytest.raises(NotImplementedError) as ei:
+            jax.grad(lambda x: eng.matmul(x, w).sum())(x)
+        msg = str(ei.value)
+        assert "'matmul'" in msg                    # the op that tripped
+        assert "'partial-diff'" in msg              # the backend
+        assert "['attention', 'bmm']" in msg        # the checked set
+        assert "'xla'" in msg                       # the suggested fallback
+    finally:
+        backends.unregister_backend("partial-diff")
 
 
 def test_pallas_attention_differentiates_through_engine():
