@@ -49,6 +49,16 @@ ATTENTION_PROBLEMS = [
 # measurements too.
 ATTENTION_BWD_PROBLEMS = ATTENTION_PROBLEMS[:2]
 
+# Decode ("attention_decode") (bk_split, n_splits) problems: decode-shaped
+# dispatches (Sq <= 8, Skv >= 256) that select the split-KV formulation —
+# a deep-cache MQA decode, a GQA chunked-decode step, and the MLA
+# absorbed-latent shape (one shared 576-wide kv "head", deepseek-v2-lite).
+ATTENTION_DECODE_PROBLEMS = [
+    ((2, 1, 8, 64), (2, 512, 1, 64)),       # MQA decode, deep cache
+    ((1, 4, 16, 64), (1, 1024, 2, 64)),     # GQA chunked decode
+    ((2, 1, 16, 576), (2, 512, 1, 576)),    # MLA absorbed latent (MQA)
+]
+
 # Backward ("gemm_bwd") tile problems, derived from PROBLEMS: each forward
 # (m, k, n) GEMM trains through two backward GEMMs — dX (variant-tagged
 # "dx"/"bdx", problem (m, n, k)) and dW ("dw"/"bdw", problem (k, m, n)).
@@ -132,6 +142,28 @@ def run() -> list[tuple[str, float, str]]:
             (_, sq, skv, h, kv, _) = dims
             rows.append((
                 f"autotune_sweep/attention_bwd_{sq}x{skv}_h{h}kv{kv}",
+                pick_ms * 1e3,
+                f"heur={'x'.join(map(str, heur))}:{heur_ms:.3f}ms "
+                f"pick={'x'.join(map(str, pick))}:{pick_ms:.3f}ms "
+                f"source={rec.get('source', '?')} "
+                f"speedup={heur_ms / pick_ms:.2f}x"))
+        for shapes in ATTENTION_DECODE_PROBLEMS:
+            dims = kernel_ops.attention_dims(shapes)
+            heur = kernel_ops.default_attention_decode_blocks(
+                *dims, "float32")
+            pick = pallas.tiles("attention_decode", shapes, "float32")
+            key = autotune.key_str("attention_decode", shapes, "float32",
+                                   "pallas")
+            rec = backends.autotune_report().get(key, {})
+            heur_ms = autotune.time_thunk(
+                kernel_ops.attention_decode_bench_thunk(*dims, "float32",
+                                                        heur))
+            pick_ms = autotune.time_thunk(
+                kernel_ops.attention_decode_bench_thunk(*dims, "float32",
+                                                        pick))
+            (_, sq, skv, h, kv, _) = dims
+            rows.append((
+                f"autotune_sweep/attention_decode_{sq}x{skv}_h{h}kv{kv}",
                 pick_ms * 1e3,
                 f"heur={'x'.join(map(str, heur))}:{heur_ms:.3f}ms "
                 f"pick={'x'.join(map(str, pick))}:{pick_ms:.3f}ms "

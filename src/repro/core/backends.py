@@ -397,13 +397,14 @@ def validate_tiles(op: str, shapes: tuple, dtype, tiles: tuple) -> list[str]:
 
     Args:
       op: registry op name (plus the "attention_bwd" / "gemm_bwd"
-        backward keys).
+        backward keys and the "attention_decode" formulation key).
       shapes: the op's cache-key shapes (see `gemm_dims` /
         `kernel_ops.attention_dims` for the accepted forms).
       dtype: operand dtype (anything `jnp.dtype` accepts).
       tiles: the resolved plan — (bm, bk, bn) for GEMM-shaped ops,
-        (bq, bk) for attention.  An empty plan is vacuously legal
-        (untiled backend).
+        (bq, bk) for attention, (bk_split, n_splits) for the decode
+        formulation.  An empty plan is vacuously legal (untiled
+        backend).
 
     Returns a list of human-readable problems (empty = legal): MXU
     (8, 128) lane alignment, the kernels' VMEM working-set budget, and
@@ -414,6 +415,10 @@ def validate_tiles(op: str, shapes: tuple, dtype, tiles: tuple) -> list[str]:
     if not tiles:
         return []
     try:
+        if op == "attention_decode":
+            _, sq, skv, _, _, d = kernel_ops.attention_dims(shapes)
+            return kernel_ops.validate_attention_decode_tiles(
+                sq, skv, d, dtype, tuple(tiles))
         if op in ("attention", "attention_bwd"):
             _, sq, skv, _, _, d = kernel_ops.attention_dims(shapes)
             return kernel_ops.validate_attention_tiles(
@@ -539,6 +544,17 @@ def _pallas_bmm(x, w, *, out_dtype, ctx):
 
 
 def _pallas_attention(q, k, v, *, causal, sm_scale, kv_len=None, ctx):
+    # Decode-shaped problems (short query, deep KV) switch formulation:
+    # the split-KV kernel grids over KV spans so B*H no longer bounds
+    # occupancy.  Its (bk_split, n_splits) tiles resolve lazily inside the
+    # wrapper under their own "attention_decode" key — ctx.tiles carries
+    # the forward (bq, bk) plan, which does not apply to this grid.
+    # Inference-only: decode dispatches are never differentiated (training
+    # geometries have Sq == Skv and keep the custom-VJP kernel below).
+    if kernel_ops.use_decode_formulation(q.shape[1], k.shape[1]):
+        return kernel_ops.attention_decode(q, k, v, kv_len,
+                                           causal=causal, sm_scale=sm_scale,
+                                           interpret=ctx.interpret)
     bq, bk = ctx.tiles if len(ctx.tiles) == 2 else (0, 0)
     return kernel_ops.attention(q, k, v, kv_len, causal=causal,
                                 sm_scale=sm_scale, bq=bq, bk=bk,
@@ -569,6 +585,9 @@ def _pallas_tile_picker(op: str, shapes: tuple, dtype) -> tuple:
     if op == "attention_bwd":
         return kernel_ops.default_attention_bwd_blocks(
             *kernel_ops.attention_dims(shapes), dtype)
+    if op == "attention_decode":
+        return kernel_ops.default_attention_decode_blocks(
+            *kernel_ops.attention_dims(shapes), dtype)
     if op == "gemm_bwd":
         variant, rows, kdim, cols = shapes
         return kernel_ops.default_gemm_bwd_blocks(variant, rows, kdim,
@@ -585,6 +604,9 @@ def _pallas_tile_candidates(op: str, shapes: tuple, dtype) -> list[tuple]:
             *kernel_ops.attention_dims(shapes), dtype)
     if op == "attention_bwd":
         return kernel_ops.candidate_attention_bwd_blocks(
+            *kernel_ops.attention_dims(shapes), dtype)
+    if op == "attention_decode":
+        return kernel_ops.candidate_attention_decode_blocks(
             *kernel_ops.attention_dims(shapes), dtype)
     if op == "gemm_bwd":
         variant, rows, kdim, cols = shapes
@@ -604,6 +626,10 @@ def _pallas_tile_bench(op: str, shapes: tuple, dtype, tiles: tuple,
             interpret=interpret)
     if op == "attention_bwd":
         return kernel_ops.attention_bwd_bench_thunk(
+            *kernel_ops.attention_dims(shapes), dtype, tiles,
+            interpret=interpret)
+    if op == "attention_decode":
+        return kernel_ops.attention_decode_bench_thunk(
             *kernel_ops.attention_dims(shapes), dtype, tiles,
             interpret=interpret)
     if op == "gemm_bwd":

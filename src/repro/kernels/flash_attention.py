@@ -17,6 +17,10 @@ Grid: (B*H, Sq/bq, Skv/bk), KV innermost ("arbitrary") so the (m, l, acc)
 scratch carries across KV steps for a fixed query tile.  Causal masking uses
 global indices; fully-masked KV blocks are skipped with pl.when (on TPU the
 DMA still prefetches them; a §Perf iteration notes the trimmed-grid variant).
+Decode-shaped problems (Sq <= 8 against a deep cache) leave this grid with
+only B*H programs — the registry instead selects the split-KV formulation
+in kernels/flash_decode.py, which shares this kernel's masking and fp32
+conventions and degenerates to it bit-identically at one split.
 An optional per-batch ``kv_len`` masks keys at/beyond the given length —
 this is what lets the ops-level wrapper zero-pad Skv to a block multiple
 (padded keys are masked out exactly) and what decode uses to attend a

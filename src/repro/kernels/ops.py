@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as flash_kernel
+from repro.kernels import flash_decode as decode_kernel
 from repro.kernels import gemm as gemm_kernel
 
 
@@ -436,6 +437,185 @@ def attention_bwd_bench_thunk(b: int, sq: int, skv: int, h: int, kv: int,
 
     grad = jax.jit(jax.grad(loss, argnums=(0, 1, 2)))
     return lambda: grad(q, k, v)
+
+
+# ----------------------------------------- attention decode formulation ---
+# Short-query/long-KV problems (a decode step against a deep cache) leave
+# the forward kernel's (B*H, Sq/bq, Skv/bk) grid with B*H programs — most
+# of the chip idles while each crawls the whole KV extent.  The split-KV
+# decode kernel (kernels/flash_decode.py) instead grids over
+# (B*H, n_splits) independent KV spans, each emitting a partial (o, lse)
+# combined by the logsumexp merge.  Its (bk_split, n_splits) tiles ride
+# the same autotune machinery under their own lazy key —
+# ("attention_decode", (q_shape, k_shape), dtype, backend) — resolved
+# only when a dispatch actually selects the decode formulation, so
+# prefill/training never touches (or measures) decode keys.
+
+# The decode formulation engages when the query is no longer than a
+# single sublane tile AND the key extent is deep enough that splitting
+# the reduction beats one pass (below this, the forward kernel's grid is
+# already fine and the merge would be pure overhead).
+DECODE_MAX_SQ = 8
+DECODE_MIN_SKV = 256
+
+
+def use_decode_formulation(sq: int, skv: int) -> bool:
+    """Whether an (Sq, Skv) attention dispatch is decode-shaped: Sq within
+    one 8-row sublane tile and the KV extent at/above DECODE_MIN_SKV."""
+    return sq <= DECODE_MAX_SQ and skv >= DECODE_MIN_SKV
+
+
+def _attention_decode_working_set(bk: int, d: int, itemsize: int) -> int:
+    """VMEM bytes for one decode grid step: the grouped-KV forward
+    working set at the fixed 8-row query tile (the padded decode query)
+    plus the fp32 partial (o, lse) block."""
+    return (_attention_working_set(DECODE_MAX_SQ, bk, d, itemsize)
+            + DECODE_MAX_SQ * (d + 1) * 4)
+
+
+def default_attention_decode_blocks(b: int, sq: int, skv: int, h: int,
+                                    kv: int, d: int, dtype
+                                    ) -> tuple[int, int]:
+    """Heuristic (bk_split, n_splits): a 256-key block (clamped to the
+    padded extent), then enough splits that each span still covers at
+    least two blocks — more splits than that trades streaming efficiency
+    for parallelism the (b*h) grid axis may already provide."""
+    itemsize = jnp.dtype(dtype).itemsize
+    bk = min(_round_up(skv, 128), 256)
+    while bk > 128 and _attention_decode_working_set(
+            bk, d, itemsize) > _VMEM_BUDGET:
+        bk //= 2
+    skvp = _round_up(skv, 128)
+    n_splits = max(1, min(8, skvp // (2 * bk)))
+    return bk, n_splits
+
+
+def candidate_attention_decode_blocks(b: int, sq: int, skv: int, h: int,
+                                      kv: int, d: int, dtype
+                                      ) -> list[tuple[int, int]]:
+    """Candidate (bk_split, n_splits) set: the heuristic pick plus its
+    axis-wise half/double neighbors — bk 128-aligned and capped at the
+    padded key extent, n_splits capped so no span is empty.  Small by
+    design, like every candidate family here."""
+    itemsize = jnp.dtype(dtype).itemsize
+    bk, ns = default_attention_decode_blocks(b, sq, skv, h, kv, d, dtype)
+    bk_cap = min(2048, _round_up(skv, 128))
+    cands = [(bk, ns)]
+    for vk, vs in ((bk // 2, ns), (bk * 2, ns), (bk, max(1, ns // 2)),
+                   (bk, ns * 2)):
+        vk = max(128, min(_round_up(vk, 128), bk_cap))
+        vs = max(1, min(vs, max(1, -(-skv // vk))))
+        cand = (vk, vs)
+        if cand in cands:
+            continue
+        if _attention_decode_working_set(vk, d, itemsize) > _VMEM_BUDGET:
+            continue
+        cands.append(cand)
+    return cands
+
+
+def validate_attention_decode_tiles(sq: int, skv: int, d: int, dtype,
+                                    tiles: tuple) -> list[str]:
+    """Static legality of a (bk_split, n_splits) decode plan: two positive
+    ints, bk_split 128-lane aligned and no longer than the padded key
+    extent, n_splits small enough that every span holds at least one live
+    block, the working set under the VMEM budget.  Same contract as
+    `validate_gemm_tiles`: problem strings, empty means legal."""
+    if len(tiles) != 2 or not all(
+            isinstance(t, int) and not isinstance(t, bool) and t > 0
+            for t in tiles):
+        return [f"plan {tiles!r} is not two positive ints "
+                f"(bk_split, n_splits)"]
+    bk, ns = tiles
+    problems = []
+    if bk % 128:
+        problems.append(f"bk_split={bk} is not a multiple of the 128-lane "
+                        f"width")
+    if bk > _round_up(skv, 128):
+        problems.append(f"bk_split={bk} exceeds the padded key extent "
+                        f"{_round_up(skv, 128)} (dead grid steps)")
+    if ns > max(1, -(-skv // bk)):
+        problems.append(f"n_splits={ns} leaves empty spans for Skv={skv} "
+                        f"at bk_split={bk} (dead programs)")
+    ws = _attention_decode_working_set(bk, d, jnp.dtype(dtype).itemsize)
+    if ws > _VMEM_BUDGET:
+        problems.append(f"decode working set {ws} B exceeds the VMEM "
+                        f"budget {_VMEM_BUDGET} B")
+    return problems
+
+
+def attention_decode_bench_thunk(b: int, sq: int, skv: int, h: int, kv: int,
+                                 d: int, dtype, tiles: tuple[int, int], *,
+                                 interpret: bool = True):
+    """Measurement unit for a decode candidate: one compiled split-KV
+    call with pinned (bk_split, n_splits) against a full-extent cache
+    (kv_len = Skv, the worst-case live decode).  Zero operands are fair
+    for the same reason as the forward bench."""
+    bk, ns = tiles
+    q = jnp.zeros((b, sq, h, d), dtype)
+    k = jnp.zeros((b, skv, kv, d), dtype)
+    v = jnp.zeros((b, skv, kv, d), dtype)
+    return lambda: attention_decode(q, k, v, skv, causal=True, bk_split=bk,
+                                    n_splits=ns, interpret=interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "bk_split", "n_splits", "interpret"))
+def attention_decode(q, k, v, kv_len=None, sm_scale=None, *,
+                     causal: bool = True, bk_split: int = 0,
+                     n_splits: int = 0, interpret: bool = True):
+    """Split-KV flash-decoding attention, arbitrary sequence lengths.
+
+    Same operand contract as `attention` — q (B, Sq, H, D), k/v compact
+    grouped (B, Skv, KV, D), optional scalar/(B,) ``kv_len``, traced
+    ``sm_scale`` folded into q — but computed by the split-KV kernel:
+    ``n_splits`` programs per (batch, head) each reduce one KV span to a
+    partial (o, lse), merged by the logsumexp combine.  The key extent is
+    zero-padded up to an (n_splits * bk_split) multiple and masked via
+    ``kv_len`` exactly like the forward wrapper pads to ``bk``.
+
+    Inference-only (no VJP): the registry selects this formulation for
+    decode-shaped dispatches (`use_decode_formulation`), which are never
+    differentiated — training geometries take the custom-VJP forward
+    kernel.  Fully-masked rows (kv_len == 0) return exact 0, never NaN;
+    partials and the merge stay fp32 for every operand dtype.
+    """
+    validate_attention_shapes(q, k, v)
+    b, sq, h, d = q.shape
+    _, skv, kvh, _ = k.shape
+    if not (bk_split and n_splits):
+        bk_split, n_splits = _cached_attention_decode_blocks(
+            (q.shape, k.shape), q.dtype, interpret)
+    sqp = _round_up(sq, 8)
+    skvp = _round_up(skv, bk_split * n_splits)
+    kvl = normalize_kv_len(kv_len, b, skv)
+    if kvl is None:
+        kvl = jnp.full((b, 1), skv, jnp.int32)   # mask the key padding
+    qt = q.transpose(0, 2, 1, 3)                 # (B, H, Sq, D)
+    kt = k.transpose(0, 2, 1, 3)                 # (B, KV, Skv, D)
+    vt = v.transpose(0, 2, 1, 3)
+    scale = (jnp.float32(1.0 / (d ** 0.5)) if sm_scale is None
+             else jnp.asarray(sm_scale, jnp.float32))
+    qt = (qt.astype(jnp.float32) * scale).astype(q.dtype)
+    if sqp != sq:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, sqp - sq), (0, 0)))
+    if skvp != skv:
+        pad = ((0, 0), (0, 0), (0, skvp - skv), (0, 0))
+        kt, vt = jnp.pad(kt, pad), jnp.pad(vt, pad)
+    o = decode_kernel.flash_decode(
+        qt, kt, vt, kvl, causal=causal, sm_scale=1.0, bk=bk_split,
+        n_splits=n_splits, q_len=sq, interpret=interpret)
+    return o[:, :, :sq].transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def _cached_attention_decode_blocks(shapes: tuple, dtype, interpret: bool
+                                    ) -> tuple[int, int]:
+    """Default (bk_split, n_splits) pick, resolved through the registry's
+    autotune cache under the lazy ("attention_decode",
+    (q_shape, k_shape), dtype, "pallas") key."""
+    from repro.core import backends
+    return backends.get_backend("pallas").tiles("attention_decode", shapes,
+                                                dtype, interpret=interpret)
 
 
 def validate_attention_shapes(q, k, v) -> None:

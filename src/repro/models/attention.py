@@ -10,8 +10,11 @@ Off-mesh (single device), GQA prefill AND decode route through the
 registry `attention` op instead — the kernel-backed path, grouped-KV
 native: the compact (B, S, KV, hd) K/V is the op operand and the kernel
 reads the shared kv-head per query-head group, so no H-broadcast is ever
-materialized.  The blockwise formulation engages only when a mesh is
-installed.
+materialized.  MLA absorbed decode rides the same op as multi-query
+attention over the latent cache.  Decode-shaped dispatches (short query,
+deep KV) select the split-KV flash-decoding formulation inside the
+backend (kernels/flash_decode.py).  The blockwise formulation engages
+only when a mesh is installed.
 
 Sharding modes (chosen per arch by sharding/policy.py):
   heads : KV-head-parallel — zero attention comm, used when n_kv_heads
@@ -73,24 +76,40 @@ def blockwise_attention(engine: ComputeEngine, q, k, v, *, causal: bool,
     for i in range(n_q):
         qi = jax.lax.slice_in_dim(q, i * qc, (i + 1) * qc, axis=1)
         extent = q_offset + (i + 1) * qc if causal else Skv
-        kvc = min(kv_chunk, extent)
-        n_kv = -(-extent // kvc)          # ceil
+        # A negative q_offset (Sq > Skv) can drive early chunks' causal
+        # extent to <= 0: no keys are live.  Clamp the SLICE geometry to one
+        # key and let the `k_idx < extent` mask (against the raw extent)
+        # invalidate everything, so those rows come out exact 0 below.
+        kvc = min(kv_chunk, max(extent, 1))
+        n_kv = max(-(-extent // kvc), 1)          # ceil, >= 1
 
-        def body(carry, j, qi=qi, kvc=kvc, i=i):
+        def body(carry, j, qi=qi, kvc=kvc, i=i, extent=extent):
             m, l, acc = carry
-            kj = jax.lax.dynamic_slice_in_dim(k, j * kvc, kvc, axis=1)
-            vj = jax.lax.dynamic_slice_in_dim(v, j * kvc, kvc, axis=1)
+            # dynamic_slice clamps an out-of-range start into
+            # [0, Skv - kvc]; mirror that clamp when deriving key
+            # positions, or the final partial chunk scores its keys at
+            # the unclamped indices (wrong mask, keys attended twice).
+            start = jnp.minimum(j * kvc, Skv - kvc)
+            kj = jax.lax.dynamic_slice_in_dim(k, start, kvc, axis=1)
+            vj = jax.lax.dynamic_slice_in_dim(v, start, kvc, axis=1)
             s = engine.einsum("bqhgd,bkhd->bhgqk", qi, kj,
                               out_dtype=jnp.float32) * sm
             q_idx = (q_offset + i * qc
                      + jax.lax.broadcasted_iota(jnp.int32, s.shape, 3))
-            k_idx = j * kvc + jax.lax.broadcasted_iota(jnp.int32, s.shape, 4)
-            valid = k_idx < extent
+            k_idx = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 4)
+            # A clamped final chunk re-reads keys the previous chunk
+            # already scored; the lower bound keeps each key attributed to
+            # exactly one logical window [j*kvc, (j+1)*kvc).
+            valid = (k_idx >= j * kvc) & (k_idx < extent)
             if causal:
                 valid = valid & (k_idx <= q_idx)
             s = jnp.where(valid, s, _NEG)
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
+            # Fully-masked rows have m_new == _NEG, where exp(s - m_new)
+            # would be 1 at every masked position; zero them so l stays 0
+            # and the final normalization emits exact 0 rows.
+            p = jnp.where(s > _NEG * 0.5, p, 0.0)
             alpha = jnp.exp(m - m_new)
             l_new = l * alpha + jnp.sum(p, axis=-1)
             acc_new = acc * alpha[..., None] + engine.einsum(
@@ -319,6 +338,12 @@ def mla_decode(engine: ComputeEngine, p, x, cache, pos, cos, sin, cfg):
     floats/token/layer — sequence-sharded.  W_uk is absorbed into the query
     (q_nope @ W_uk per head) and W_uv applied after attention, so per-step
     FLOPs are O(S·(lora+rope)·H) instead of O(S·H·(nope+vd)·lora).
+
+    Off-mesh, the absorbed attention itself dispatches the registry
+    `attention` op as multi-query attention over the latent (one shared
+    kv "head" of width lora + rope_d, values = the c_kv rows) — at deep
+    caches the op selects the split-KV decode formulation.  Under a mesh
+    the grouped-einsum form is kept so GSPMD shards the sequence axis.
     """
     from repro.models.common import rmsnorm
     B, C, D = x.shape
@@ -337,14 +362,34 @@ def mla_decode(engine: ComputeEngine, p, x, cache, pos, cos, sin, cfg):
     w_uk = p["w_uk"].reshape(lora, H, nope)
     q_abs = engine.einsum("bqhn,rhn->bqhr", q_nope, w_uk,
                           out_dtype=jnp.float32)
-    s = (engine.einsum("bqhr,bsr->bhqs", q_abs, cc, out_dtype=jnp.float32)
-         + engine.einsum("bqhr,bsr->bhqs", q_rope, cr,
-                         out_dtype=jnp.float32))
-    s = s / ((nope + rope_d) ** 0.5)
-    s = _pos_mask(s, pos, 3, q_axis=2)
-    w = jax.nn.softmax(s, axis=-1)
-    ctx = engine.einsum("bhqs,bsr->bqhr", w, cc,
-                        out_dtype=jnp.float32)         # (B, C, H, lora)
+    if not hints.mesh_active():
+        # Absorbed MLA decode IS multi-query attention over the latent:
+        # every head shares ONE kv "head" — the cache row
+        # concat(c_kv, k_rope) (lora + rope_d wide) — and the value is
+        # c_kv itself.  Route it through the registry `attention` op so
+        # the decode formulation (split-KV kernel) and autotune apply.
+        # The op requires matching K/V widths; zero-padding V's trailing
+        # rope_d columns is exact (softmax weights times zero columns)
+        # and the pad is sliced off below.
+        q_cat = jnp.concatenate(
+            [q_abs, q_rope.astype(jnp.float32)], axis=-1)   # (B,C,H,lo+ro)
+        kv_cat = jnp.concatenate([cc, cr], axis=-1)[:, :, None, :]
+        v_pad = jnp.concatenate([cc, jnp.zeros_like(cr)],
+                                axis=-1)[:, :, None, :]
+        ctx = engine.attention(
+            q_cat.astype(kv_cat.dtype), kv_cat, v_pad, causal=C > 1,
+            sm_scale=1.0 / ((nope + rope_d) ** 0.5),
+            kv_len=pos + C)[..., :lora]                     # (B, C, H, lora)
+    else:
+        s = (engine.einsum("bqhr,bsr->bhqs", q_abs, cc,
+                           out_dtype=jnp.float32)
+             + engine.einsum("bqhr,bsr->bhqs", q_rope, cr,
+                             out_dtype=jnp.float32))
+        s = s / ((nope + rope_d) ** 0.5)
+        s = _pos_mask(s, pos, 3, q_axis=2)
+        w = jax.nn.softmax(s, axis=-1)
+        ctx = engine.einsum("bhqs,bsr->bqhr", w, cc,
+                            out_dtype=jnp.float32)          # (B, C, H, lora)
     w_uv = p["w_uv"].reshape(lora, H, vd)
     y = engine.einsum("bqhr,rhv->bqhv", ctx, w_uv, out_dtype=jnp.float32)
     y = y.reshape(B, C, H * vd).astype(x.dtype)

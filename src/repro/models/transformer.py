@@ -424,6 +424,11 @@ def decode_hidden(engine: ComputeEngine, cfg, params, caches, token, pos):
     strictly one-token).  pos: scalar int32, or (B,) per-sequence START
     positions (continuous batching) — the chunk occupies [pos, pos + C).
 
+    Off-mesh, GQA and MLA decode both dispatch the registry `attention`
+    op (MLA in its absorbed multi-query-over-the-latent form); on the
+    pallas backend a deep-cache dispatch selects the split-KV
+    flash-decoding formulation (kernels/flash_decode.py).
+
     Returns (hidden (B, C, D), new caches).
     """
     C = token.shape[1]

@@ -52,6 +52,13 @@ def make_forward_step(engine: ComputeEngine, cfg, *, n_q_chunks: int = 8,
 
 
 def make_decode_step(engine: ComputeEngine, cfg):
+    """One-token decode against the slot engine's fixed cache buffers.
+
+    Off-mesh the attention dispatch rides the registry `attention` op;
+    on the pallas backend a decode-shaped dispatch (Sq <= 8 against a
+    cache buffer >= 256 rows) selects the split-KV flash-decoding
+    formulation (kernels/flash_decode.py) — same contract, tiles under
+    the lazy "attention_decode" autotune key."""
     def decode_step(params, caches, token, pos):
         h, new_caches = tfm.decode_hidden(engine, cfg, params, caches,
                                           token, pos)
@@ -71,7 +78,11 @@ def make_paged_step(engine: ComputeEngine, cfg):
     written rows back into the pools.  One function serves both traffic
     shapes: chunked prefill dispatches (B=1, chunk=C) and batched decode
     dispatches (B=batch, chunk=1); the scheduler pads both to bucketed
-    shapes so a `StepCompileCache` bounds the trace count.
+    shapes so a `StepCompileCache` bounds the trace count.  Decode-shaped
+    dispatches whose gathered buffer reaches 256 rows take the split-KV
+    flash-decoding formulation on the pallas backend (see
+    make_decode_step) — formulation choice never changes tokens
+    (benchmarks/decode_sweep.py --smoke gates bit-parity).
     """
     from repro.serve import kvpool
 

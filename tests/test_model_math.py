@@ -13,7 +13,8 @@ from repro.core import backends, make_engine
 from repro.kernels import ref as kref
 from repro.launch.mesh import make_mesh, set_mesh
 from repro.models import ssm as ssm_mod
-from repro.models.attention import blockwise_attention, gqa_forward, gqa_init
+from repro.models.attention import (blockwise_attention, gqa_forward,
+                                    gqa_init, mla_forward, mla_init)
 from repro.models.common import chunked_cross_entropy, rope_apply, rope_table
 from repro.models.moe import capacity, moe_forward, moe_init
 from repro.configs.base import get_arch, reduced
@@ -61,6 +62,126 @@ def test_blockwise_attention_chunk_invariance():
                             kv_chunk=64)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
                                atol=2e-5)
+
+
+def _dense_grouped_oracle(q, k, v, *, causal, q_offset=None):
+    """Dense jnp oracle for the grouped (B, Sq, KV, G, Dh) layout with an
+    independent value width (MLA); fully-masked rows come out exact 0."""
+    B, Sq, KV, G, Dh = q.shape
+    Skv = k.shape[1]
+    if q_offset is None:
+        q_offset = Skv - Sq
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                   preferred_element_type=jnp.float32) / (Dh ** 0.5)
+    if causal:
+        qi = q_offset + jax.lax.broadcasted_iota(jnp.int32, s.shape, 3)
+        ki = jax.lax.broadcasted_iota(jnp.int32, s.shape, 4)
+        s = jnp.where(ki <= qi, s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(s > -0.5e30, jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgqk,bkhv->bhgqv", p, v,
+                     preferred_element_type=jnp.float32)
+    out = out / jnp.maximum(l, 1e-37)
+    return out.transpose(0, 3, 1, 2, 4)
+
+
+@pytest.mark.parametrize("Skv,kv_chunk,causal,shard_mode", [
+    (100, 64, True, "seq"),     # the clamped-final-chunk repro
+    (100, 64, True, "heads"),
+    (100, 64, False, "seq"),
+    (100, 33, True, "seq"),     # several ragged windows
+    (192, 128, True, "heads"),
+])
+def test_blockwise_attention_non_multiple_kv_chunk(Skv, kv_chunk, causal,
+                                                   shard_mode):
+    """Regression: when the causal KV extent exceeds and is not a multiple
+    of `kv_chunk`, dynamic_slice clamps the final chunk's start while the
+    mask's key iota used to assume the unclamped start — keys were scored
+    at wrong positions and some attended twice (max abs err 0.25 at
+    Skv=100, kv_chunk=64 before the fix)."""
+    B, KV, G, D = 2, 2, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(Skv + kv_chunk), 3)
+    q = jax.random.normal(ks[0], (B, Skv, KV, G, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Skv, KV, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Skv, KV, D), jnp.float32)
+    got = blockwise_attention(ENGINE, q, k, v, causal=causal,
+                              n_q_chunks=4, kv_chunk=kv_chunk,
+                              shard_mode=shard_mode)
+    want = _dense_grouped_oracle(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_blockwise_attention_mla_geometry_non_multiple_chunk():
+    """MLA geometry (value width != qk width) crossing the kv_chunk
+    boundary at a non-multiple extent — the mla_forward prefill shape of
+    the clamp bug (S=1500 > kv_chunk=1024, final window clamped)."""
+    B, S, H, Dh, Dv = 1, 1500, 2, 32, 16
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (B, S, H, 1, Dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, Dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, Dv), jnp.float32)
+    got = blockwise_attention(ENGINE, q, k, v, causal=True, n_q_chunks=4,
+                              kv_chunk=1024, shard_mode="heads")
+    want = _dense_grouped_oracle(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_blockwise_attention_sq_gt_skv_negative_offset():
+    """Sq > Skv right-alignment: early query rows sit at negative global
+    positions with NO live keys under causality — the causal extent is
+    <= 0 and the clamped slice geometry must still mask everything, so
+    those rows come out exact 0 (never NaN)."""
+    B, Sq, Skv, KV, G, D = 1, 16, 8, 2, 1, 16
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(ks[0], (B, Sq, KV, G, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Skv, KV, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Skv, KV, D), jnp.float32)
+    got = blockwise_attention(ENGINE, q, k, v, causal=True, n_q_chunks=4,
+                              kv_chunk=4)
+    want = _dense_grouped_oracle(q, k, v, causal=True)
+    assert np.all(np.isfinite(np.asarray(got)))
+    # rows at negative global positions: exact 0
+    dead = Sq - Skv
+    assert np.all(np.asarray(got[:, :dead]) == 0.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mla_forward_prefill_crosses_kv_chunk_boundary():
+    """End-to-end mla_forward at S > 1024 (the hard-wired blockwise
+    kv_chunk): before the clamp fix the final KV window silently
+    corrupted every off-mesh MLA prefill at these lengths.  Oracle:
+    the same projections with one dense softmax attention."""
+    from repro.models.common import rmsnorm
+    cfg = reduced(get_arch("deepseek-v2-lite-16b"))
+    p = mla_init(jax.random.PRNGKey(0), cfg)
+    B, S = 1, 1500
+    nope, rope_d = cfg.qk_nope_dim, cfg.qk_rope_dim
+    lora, vd, H = cfg.kv_lora_rank, cfg.v_head_dim, cfg.n_heads
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model),
+                          jnp.float32) * 0.5
+    cos, sin = rope_table(jnp.arange(S), rope_d, cfg.rope_theta)
+    got = mla_forward(ENGINE, p, x, cos, sin, cfg, n_q_chunks=4)
+
+    q = (x @ p["wq"]).reshape(B, S, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope_apply(q_rope, cos, sin)
+    dkv = x @ p["w_dkv"]
+    c_kv = rmsnorm(dkv[..., :lora], p["kv_norm"]["scale"], cfg.norm_eps)
+    k_rope = rope_apply(dkv[..., lora:][:, :, None, :], cos, sin)
+    k_nope = (c_kv @ p["w_uk"]).reshape(B, S, H, nope)
+    v = (c_kv @ p["w_uv"]).reshape(B, S, H, vd)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, rope_d))], axis=-1)
+    y = _dense_grouped_oracle(q_full.reshape(B, S, H, 1, nope + rope_d),
+                              k_full, v, causal=True)
+    want = y.reshape(B, S, H * vd) @ p["wo"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)
 
 
 def test_gqa_prefill_routes_through_registry_attention_off_mesh():
