@@ -40,6 +40,13 @@ ATTENTION_PROBLEMS = [
     ((1, 256, 8, 64), (1, 256, 2, 64)),     # GQA prefill, G=4
     ((1, 100, 14, 32), (1, 100, 2, 32)),    # odd S (padded kernel path)
     ((2, 1, 8, 64), (2, 128, 1, 64)),       # MQA decode against a cache
+    # Per-SHARD problems: the LOCAL shapes the sharded_pallas backend's
+    # shard bodies resolve on the 8-virtual-device data mesh of
+    # benchmarks/sharded_step.py (global batch 8 -> per-shard batch 1;
+    # the global problem's key never exists).  Sweeping them keeps
+    # `--check-persisted` proving the device-local keys the sharded
+    # backend consults are served from the persisted table too.
+    ((1, 64, 4, 32), (1, 64, 2, 32)),       # sharded_step prefill shard
 ]
 
 # Backward ("attention_bwd") tile problems: the training shapes — prefill
@@ -57,6 +64,8 @@ ATTENTION_DECODE_PROBLEMS = [
     ((2, 1, 8, 64), (2, 512, 1, 64)),       # MQA decode, deep cache
     ((1, 4, 16, 64), (1, 1024, 2, 64)),     # GQA chunked decode
     ((2, 1, 16, 576), (2, 512, 1, 576)),    # MLA absorbed latent (MQA)
+    ((1, 1, 4, 32), (1, 512, 2, 32)),       # sharded_step decode shard
+                                            # (per-shard batch of global 8)
 ]
 
 # Backward ("gemm_bwd") tile problems, derived from PROBLEMS: each forward

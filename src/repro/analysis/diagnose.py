@@ -6,6 +6,8 @@ while-trip multipliers).  The §Perf loop's 'profiler'.
 """
 from __future__ import annotations
 
+import collections
+import math
 import re
 
 from repro.analysis import hlo_cost
@@ -58,6 +60,56 @@ def attribute(text: str, top: int = 20) -> dict:
     mem_rows.sort(reverse=True)
     return {"collectives": coll_rows[:top], "traffic": mem_rows[:top],
             "totals": a.totals()}
+
+
+def count_collectives(hlo_text: str) -> dict:
+    """Count collective ops by kind in an HLO module text:
+    ``{"all-gather": 2, "all-reduce": 1, ...}`` (kinds with zero count
+    are omitted).  Async ``-start`` forms fold into their base kind and
+    the matching ``-done`` halves are skipped, so each collective counts
+    exactly once.  This is the occurrence-count twin of `attribute()`'s
+    byte accounting — the audit surface for "how many collectives did
+    this sharded trace emit, and of what kind"."""
+    comps = hlo_cost.parse_module(hlo_text)
+    counts: collections.Counter = collections.Counter()
+    for name, comp in comps.items():
+        if name == "__entry__":   # alias of the entry computation
+            continue
+        for op in comp.ops:
+            if op.opcode.endswith("-done"):
+                continue
+            oc = (op.opcode[:-6] if op.opcode.endswith("-start")
+                  else op.opcode)
+            if oc in hlo_cost._COLLECTIVES:
+                counts[oc] += 1
+    return dict(counts)
+
+
+def full_kv_gathers(hlo_text: str, kv_elems: int) -> list[str]:
+    """All-gather ops whose result holds >= `kv_elems` elements — i.e.
+    gathers at least as large as one full K or V tensor
+    (B * Skv * KV_heads * head_dim).  The sharded attention path must
+    never produce one: batch/head sharding is collective-free, and the
+    seq-split path only gathers (o, lse) partials, which are Sq-sized,
+    not Skv-sized.  Returns human-readable descriptions of offenders
+    (empty list == clean); the sharded smoke gate asserts it empty."""
+    comps = hlo_cost.parse_module(hlo_text)
+    bad = []
+    for name, comp in comps.items():
+        if name == "__entry__":
+            continue
+        for op in comp.ops:
+            if op.opcode.endswith("-done"):
+                continue
+            oc = (op.opcode[:-6] if op.opcode.endswith("-start")
+                  else op.opcode)
+            if oc != "all-gather":
+                continue
+            elems = sum(math.prod(dims) for _, dims in op.shapes)
+            if elems >= kv_elems:
+                bad.append(f"{name}/{op.name}: all-gather of {elems} "
+                           f"elements >= full-KV size {kv_elems}")
+    return bad
 
 
 def print_report(text: str, top: int = 15):

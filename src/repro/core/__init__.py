@@ -17,6 +17,10 @@ from repro.core.compile_cache import (StepCompileCache, normalize_buckets,
                                       pick_bucket)
 from repro.core.engine import ComputeEngine, make_engine
 from repro.core.precision import Precision
+from repro.core import shard_backend as _shard_backend  # noqa: F401
+# importing repro.core registers the built-in backends: "pallas"/"xla"
+# (core/backends.py at module load) and "sharded_pallas" (the line above,
+# through the public register_backend seam).
 
 __all__ = ["ComputeEngine", "make_engine", "Precision", "OP_SET",
            "register_backend", "get_backend", "list_backends",

@@ -57,29 +57,51 @@ class StepCompileCache:
 
     `static_argnames` forwards to `jax.jit` for hashable static args
     (engine/config objects).
+
+    `topology` is a hashable mesh fingerprint (``hints.mesh_topology``:
+    ``(("data", 8), ...)``, or ``()`` off-mesh).  It extends every cache
+    key: each topology owns its own jit cache (a step traced under one
+    mesh embeds that mesh's shard_maps — replaying it under another would
+    silently compute on the wrong device set), and recorded dispatch keys
+    are prefixed with it, so `stats()['dispatches']` distinguishes the
+    same shape bucket dispatched under different meshes.
     """
 
     def __init__(self, fn: Callable, *, name: str = "step",
-                 static_argnames=()):
+                 static_argnames=(), topology: tuple = ()):
         self.name = name
+        self.topology = tuple(topology)
         self._traces = 0
-
-        def counted(*args, **kwargs):
-            self._traces += 1  # python side effect: trace-time only
-            return fn(*args, **kwargs)
-
-        self._jit = jax.jit(counted, static_argnames=static_argnames)
+        self._static = tuple(static_argnames)
+        self._fn = fn
+        self._jits: dict = {}
         self.calls = 0
         self._dispatch_shapes = collections.Counter()
 
+    def _jit_for(self, topology: tuple):
+        jit = self._jits.get(topology)
+        if jit is None:
+            # a FRESH closure per topology: jax.jit keys its trace cache
+            # on the underlying callable, so reusing one function object
+            # would silently replay a trace (and its embedded shard_maps)
+            # across meshes.
+            def counted(*args, **kwargs):
+                self._traces += 1  # python side effect: trace-time only
+                return self._fn(*args, **kwargs)
+
+            jit = self._jits[topology] = jax.jit(
+                counted, static_argnames=self._static)
+        return jit
+
     def __call__(self, *args, **kwargs):
         self.calls += 1
-        return self._jit(*args, **kwargs)
+        return self._jit_for(self.topology)(*args, **kwargs)
 
     def record(self, key) -> None:
         """Log one dispatch under a caller-chosen bucket key (shows up in
-        `stats()['dispatches']`)."""
-        self._dispatch_shapes[key] += 1
+        `stats()['dispatches']`, prefixed by the mesh topology when one
+        is set)."""
+        self._dispatch_shapes[self.topology + tuple(key)] += 1
 
     @property
     def traces(self) -> int:
@@ -87,5 +109,5 @@ class StepCompileCache:
 
     def stats(self) -> dict:
         return {"name": self.name, "traces": self._traces,
-                "calls": self.calls,
+                "calls": self.calls, "topology": self.topology,
                 "dispatches": dict(self._dispatch_shapes)}

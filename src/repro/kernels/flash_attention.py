@@ -534,3 +534,39 @@ def flash_attention(q, k, v, *, causal: bool = True, sm_scale=None,
                   q_len=q_len if q_len else sq, interpret=interpret,
                   bwd_key=bwd_key)
     return _flash(cfg, q, k, v, kvl)
+
+
+def flash_attention_with_lse(q, k, v, *, causal: bool = True, sm_scale=None,
+                             bq: int = 256, bk: int = 256, kv_len=None,
+                             q_offset: int | None = None, q_len: int = 0,
+                             interpret: bool = True):
+    """Forward-only flash attention that also emits the softmax residual.
+
+    Same operand/masking contract as `flash_attention`; returns
+    ``(o, lse)`` with ``o`` (B, H, Sq, D) in q.dtype and ``lse`` (B, H, Sq)
+    fp32 — the per-row ``m + log l`` in the scaled score space.  This is
+    the per-shard partial a sequence-split caller merges with the
+    flash-decoding logsumexp combine (kernels/flash_decode.py): each KV
+    span contributes a span-normalized ``o`` plus its ``lse``, and the
+    combine reweights by ``exp(lse - max lse)``.
+
+    Fully-masked rows carry ``o == 0`` and ``lse == 0`` (any finite value;
+    the backward never sees this path).  Callers merging partials must
+    convert those rows to the combine's -1e30 empty-span sentinel — the
+    row-liveness condition is analytic in (kv_len, q_len), see
+    `ops.attention_partial`.  NOT differentiable: partial emissions are an
+    inference-path contract, like the split-KV decode kernel."""
+    b, h, sq, d = q.shape
+    _, kvh, skv, _ = k.shape
+    assert sq % bq == 0 and skv % bk == 0, ((sq, skv), (bq, bk))
+    assert h % kvh == 0, (h, kvh)
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    if q_offset is None:
+        q_offset = skv - sq
+    kvl = (None if kv_len is None
+           else kv_len.astype(jnp.int32).reshape(b, 1))
+    cfg = _Config(causal=causal, sm_scale=float(sm_scale), bq=bq, bk=bk,
+                  bq_bwd=0, bk_bwd=0, q_offset=q_offset,
+                  q_len=q_len if q_len else sq, interpret=interpret)
+    return _forward(cfg, q, k, v, kvl, return_lse=True)

@@ -54,6 +54,11 @@ from jax.experimental import pallas as pl
 from repro.kernels.flash_attention import (_COMPILER_PARAMS, _LANES,
                                            _NEG_INF, _dot, pltpu)
 
+# The lse value an empty (fully-masked) KV span reports; `combine` weighs
+# such partials to zero.  Cross-device partial emitters
+# (ops.attention_partial, kernels/sharded.py) must use the SAME sentinel.
+EMPTY_SPAN_LSE = _NEG_INF
+
 
 def _decode_kernel(q_ref, k_ref, v_ref, kvl_ref, o_ref, lse_ref,
                    m_ref, l_ref, acc_ref, *, nj: int, bq: int, bk: int,

@@ -12,6 +12,7 @@ and padded query rows are sliced off.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -721,6 +722,58 @@ def attention(q, k, v, kv_len=None, sm_scale=None, *, causal: bool = True,
         bq_bwd=bq_bwd, bk_bwd=bk_bwd, bwd_key=(q.shape, k.shape),
         kv_len=kvl, q_offset=skv - sq, q_len=sq, interpret=interpret)
     return o[:, :, :sq].transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
+def attention_partial(q, k, v, kv_len, sm_scale=None, *, causal: bool = True,
+                      interpret: bool = True):
+    """Forward-only partial attention over ONE KV span: returns (o, lse).
+
+    The sequence-split building block (kernels/sharded.py): q (B, Sq, H, D)
+    against a LOCAL key span k/v (B, Skv, KV, D), where ``kv_len`` is the
+    GLOBAL live extent minus this span's start offset — it may exceed Skv
+    (the extent ends beyond this span: every local key is live) or be <= 0
+    (the span is entirely beyond the extent: all rows fully masked).
+    Causal queries right-align against that same relative extent — the
+    kernel's dynamic ``q_offset = kv_len - Sq`` reproduces the global
+    diagonal span-locally — so kv_len is deliberately NOT clamped to Skv;
+    the (bq, bk) tiles are clamped to divisors of (Sq, Skv) instead, so no
+    key padding exists for an oversized kv_len to unmask.
+
+    Returns ``o`` (B, H, Sq, D) span-normalized in q.dtype and ``lse``
+    (B, H, Sq) fp32 with the -1e30 empty-span sentinel on fully-masked
+    rows — exactly the per-span contract of `flash_decode.combine`, which
+    merges partials across spans (or devices, after an all-gather).
+    Inference-only, like the split-KV decode kernel."""
+    validate_attention_shapes(q, k, v)
+    b, sq, h, d = q.shape
+    _, skv, kvh, _ = k.shape
+    bq, bk = _cached_attention_blocks((q.shape, k.shape), q.dtype, interpret)
+    if sq % bq:
+        bq = math.gcd(sq, bq)
+    if skv % bk:
+        bk = math.gcd(skv, bk)
+    validate_kv_len(kv_len, b)
+    kvl = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (b,))
+    qt = q.transpose(0, 2, 1, 3)                 # (B, H, Sq, D)
+    kt = k.transpose(0, 2, 1, 3)                 # (B, KV, Skv, D)
+    vt = v.transpose(0, 2, 1, 3)
+    scale = (jnp.float32(1.0 / (d ** 0.5)) if sm_scale is None
+             else jnp.asarray(sm_scale, jnp.float32))
+    qt = (qt.astype(jnp.float32) * scale).astype(q.dtype)
+    o, lse = flash_kernel.flash_attention_with_lse(
+        qt, kt, vt, causal=causal, sm_scale=1.0, bq=bq, bk=bk,
+        kv_len=kvl.reshape(b, 1), q_len=sq, interpret=interpret)
+    # The kernel stores lse == 0 for fully-masked rows; the combine needs
+    # the empty-span sentinel there.  Row liveness is analytic: some key is
+    # live iff kv_len > 0 and (non-causal, or the row's causal extent
+    # kv_len - Sq + i reaches key 0).
+    rows = jnp.arange(sq)[None, :]               # (1, Sq)
+    live = kvl[:, None] > 0                      # (B, Sq)
+    if causal:
+        live = live & (rows >= sq - kvl[:, None])
+    lse = jnp.where(live[:, None, :], lse, decode_kernel.EMPTY_SPAN_LSE)
+    return o, lse
 
 
 def _cached_attention_blocks(shapes: tuple, dtype, interpret: bool

@@ -1,29 +1,31 @@
-"""Attention: GQA with blockwise streaming softmax, and MLA (DeepSeek).
+"""Attention: GQA and MLA (DeepSeek), dispatching the registry op at every
+scale.
 
-Prefill/train never materializes the S×S score matrix: queries are processed
-in static chunks and KV streams through an online-softmax scan — the same
-"operands stream through on-chip memory, accumulator never leaves" structure
-as the paper's GEMM engine (kernels/flash_attention.py is the Pallas TPU
-version of exactly this loop; this file is the distribution-aware jnp
-formulation that GSPMD can shard, used for lowering at 512 devices).
-Off-mesh (single device), GQA prefill AND decode route through the
-registry `attention` op instead — the kernel-backed path, grouped-KV
-native: the compact (B, S, KV, hd) K/V is the op operand and the kernel
-reads the shared kv-head per query-head group, so no H-broadcast is ever
-materialized.  MLA absorbed decode rides the same op as multi-query
-attention over the latent cache.  Decode-shaped dispatches (short query,
-deep KV) select the split-KV flash-decoding formulation inside the
-backend (kernels/flash_decode.py).  The blockwise formulation engages
-only when a mesh is installed.
+Every path — train, prefill, decode, MLA absorbed decode — dispatches the
+registry `attention` op UNCONDITIONALLY; distribution is the backend's
+job, not this module's (the `sharded_pallas` backend shard_maps the
+kernels over the installed mesh, see core/shard_backend.py and
+kernels/sharded.py; plain `xla` remains the GSPMD formulation a 512-device
+abstract-mesh dry-run lowers).  The op is grouped-KV native: the compact
+(B, S, KV, hd) K/V is the operand and the kernel reads the shared kv-head
+per query-head group, so no H-broadcast is ever materialized.  MLA
+absorbed decode rides the same op as multi-query attention over the
+latent cache.  Decode-shaped dispatches (short query, deep KV) select the
+split-KV flash-decoding formulation inside the backend
+(kernels/flash_decode.py).
 
-Sharding modes (chosen per arch by sharding/policy.py):
+`blockwise_attention` — the streaming-softmax jnp formulation that never
+materializes the S×S score matrix (the same "operands stream through
+on-chip memory, accumulator never leaves" structure as the paper's GEMM
+engine) — survives as the A/B ORACLE: ``kernel_attention=False`` forces it
+for baseline comparisons in tests/benchmarks; no model path requires it.
+
+Sharding modes (chosen per arch by sharding/policy.py) apply to that
+oracle formulation:
   heads : KV-head-parallel — zero attention comm, used when n_kv_heads
           divides the TP axis.
   seq   : query-sequence-parallel — uniform utilization for small-KV GQA
           (kv=2..10), costs one K/V all-gather per layer (GSPMD inserts it).
-
-Decode attends over a sequence-sharded KV cache; softmax over the sharded
-axis lowers to flash-decoding (partial max/sum + all-reduce) under GSPMD.
 """
 from __future__ import annotations
 
@@ -153,12 +155,13 @@ def gqa_forward(engine: ComputeEngine, p, x, cos, sin, cfg, *,
                 return_kv: bool = False, kernel_attention: bool = True):
     """x: (B, S, D) -> (B, S, D).  Full-sequence (train / prefill).
 
-    Off-mesh with ``kernel_attention`` (the default), attention dispatches
-    the registry `attention` op — the kernel-backed path, for training AND
-    inference: the flash kernel carries a custom VJP, so jax.grad flows
-    through the same numerics serving runs.  ``kernel_attention=False``
-    forces the blockwise jnp formulation (the A/B baseline).  Under a mesh
-    the blockwise GSPMD path is always used.
+    With ``kernel_attention`` (the default), attention dispatches the
+    registry `attention` op at EVERY scale — the kernel-backed path, for
+    training AND inference: the flash kernel carries a custom VJP, so
+    jax.grad flows through the same numerics serving runs, and the backend
+    decides distribution (`sharded_pallas` shard_maps over the installed
+    mesh).  ``kernel_attention=False`` forces the blockwise jnp
+    formulation (the A/B oracle).
     """
     B, S, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -171,16 +174,16 @@ def gqa_forward(engine: ComputeEngine, p, x, cos, sin, cfg, *,
     if cos is not None:
         q = rope_apply(q, cos, sin)
         k = rope_apply(k, cos, sin)
-    if kernel_attention and not hints.mesh_active():
-        # Single-device prefill: the kernel-backed registry `attention` op
-        # (flash kernel under the pallas backend), grouped-KV native — the
+    if kernel_attention:
+        # The kernel-backed registry `attention` op, grouped-KV native: the
         # compact (B, S, KV, hd) K/V go straight to the op, which reads the
         # shared kv-head per query-head group (same kv*G+g head order as
-        # the grouped reshape below).  No H-broadcast anywhere.
+        # the grouped reshape below).  No H-broadcast anywhere; the
+        # backend decides distribution.
         y = engine.attention(q, k, v, causal=cfg.causal)
     else:
-        # Mesh installed: the distribution-aware blockwise formulation that
-        # GSPMD shards (heads- or sequence-parallel per shard_mode).
+        # The blockwise jnp A/B oracle (heads- or sequence-parallel under
+        # GSPMD per shard_mode).
         qg = q.reshape(B, S, KV, H // KV, hd)
         y = blockwise_attention(engine, qg, k, v, causal=cfg.causal,
                                 n_q_chunks=n_q_chunks, shard_mode=shard_mode)
@@ -204,23 +207,6 @@ def cache_write(cache, new, pos, axis: int = 1):
             c, n, p, axis=axis - 1))(cache, new, pos)
 
 
-def _pos_mask(s, pos, k_axis: int, q_axis: int | None = None):
-    """Mask key positions beyond the live extent.  `pos` is the START
-    position of the current chunk (scalar or (B,)); with a q_axis of
-    extent C > 1 (chunked prefill), query i may see keys <= pos + i —
-    right-aligned causality between the chunk's own tokens."""
-    k_idx = jax.lax.broadcasted_iota(jnp.int32, s.shape, k_axis)
-    if pos.ndim == 0:
-        limit = pos
-    else:
-        shape = [1] * s.ndim
-        shape[0] = pos.shape[0]
-        limit = pos.reshape(shape)
-    if q_axis is not None and s.shape[q_axis] > 1:
-        limit = limit + jax.lax.broadcasted_iota(jnp.int32, s.shape, q_axis)
-    return jnp.where(k_idx <= limit, s, _NEG)
-
-
 def gqa_decode(engine: ComputeEngine, p, x, cache, pos, cos, sin, cfg):
     """Decode a chunk of C new tokens against a sequence-sharded KV cache
     (C == 1 is plain one-token decode; C > 1 is a chunked-prefill step).
@@ -230,13 +216,15 @@ def gqa_decode(engine: ComputeEngine, p, x, cache, pos, cos, sin, cfg):
     positions — the chunk's tokens occupy [pos, pos + C).
     Returns (y, cache').
 
-    Off-mesh, attention dispatches the grouped registry `attention` op
-    (compact KV operand, ``kv_len = pos + C`` masks unwritten cache rows;
-    for C > 1 causal right-alignment against that live extent keeps
+    Attention dispatches the grouped registry `attention` op at every
+    scale (compact KV operand, ``kv_len = pos + C`` masks unwritten cache
+    rows; for C > 1 causal right-alignment against that live extent keeps
     causality between the chunk's own tokens — the PR-4 chunked-prefill
-    semantics).  Under a mesh the grouped-einsum flash-decoding
-    formulation is kept — GSPMD shards its reductions over the sequence
-    axis.
+    semantics).  The backend decides distribution: `sharded_pallas`
+    batch-shards decode or sequence-splits a deep cache into per-device
+    partial (o, lse) spans merged by the flash-decoding combine
+    (kernels/sharded.py); the plain `xla` formulation lowers to partial
+    reductions + all-reduce under a GSPMD mesh.
     """
     B, C, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -250,20 +238,8 @@ def gqa_decode(engine: ComputeEngine, p, x, cache, pos, cos, sin, cfg):
     cv = cache_write(cache["v"], v, pos)
     ck = hints.shard(ck, "dp", "model", None, None)
     cv = hints.shard(cv, "dp", "model", None, None)
-    if not hints.mesh_active():
-        # Single-device decode: grouped registry op over the compact cache.
-        y = engine.attention(q.astype(ck.dtype), ck, cv, causal=C > 1,
-                             kv_len=pos + C)
-        y = y.reshape(B, C, H * hd).astype(x.dtype)
-        return engine.matmul(y, p["wo"]), {"k": ck, "v": cv}
-    qg = q.reshape(B, C, KV, H // KV, hd)
-    # Flash-decoding under GSPMD: S_max is sharded; max/sum lower to partial
-    # reductions + all-reduce, the weighted sum to partial matmul+all-reduce.
-    s = engine.einsum("bqhgd,bkhd->bhgqk", qg, ck,
-                      out_dtype=jnp.float32) / (hd ** 0.5)
-    s = _pos_mask(s, pos, 4, q_axis=3)
-    w = jax.nn.softmax(s, axis=-1)
-    y = engine.einsum("bhgqk,bkhd->bqhgd", w, cv, out_dtype=jnp.float32)
+    y = engine.attention(q.astype(ck.dtype), ck, cv, causal=C > 1,
+                         kv_len=pos + C)
     y = y.reshape(B, C, H * hd).astype(x.dtype)
     return engine.matmul(y, p["wo"]), {"k": ck, "v": cv}
 
@@ -296,10 +272,18 @@ def _mla_split(cfg):
 
 
 def mla_forward(engine: ComputeEngine, p, x, cos, sin, cfg, *,
-                n_q_chunks: int = 8, return_cache: bool = False):
+                n_q_chunks: int = 8, return_cache: bool = False,
+                kernel_attention: bool = True):
     """MLA prefill/train: materialize per-head K/V from the latent.
 
-    Head-parallel (16 heads divide the TP axis for deepseek-v2-lite).
+    With ``kernel_attention`` (the default) the materialized-KV attention
+    dispatches the registry `attention` op in the MHA layout (KV == H,
+    G == 1).  The op requires matching K/V head widths and MLA's value
+    width (v_head_dim) is narrower than its qk width (nope + rope_d):
+    zero-padding V's trailing columns is exact — softmax weights times
+    zero columns — and the pad is sliced off after the op.
+    ``kernel_attention=False`` keeps the blockwise jnp oracle, which
+    supports Dv != Dh natively (the A/B baseline).
     """
     from repro.models.common import rmsnorm
     B, S, D = x.shape
@@ -315,11 +299,15 @@ def mla_forward(engine: ComputeEngine, p, x, cos, sin, cfg, *,
     q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
     k_full = jnp.concatenate(
         [k_nope, jnp.broadcast_to(k_rope, (B, S, H, rope_d))], axis=-1)
-    # MHA layout: KV == H, G == 1; pad V's head dim up to qk dim not needed —
-    # blockwise_attention only requires q/k same Dh; v has its own dim.
-    qg = q_full.reshape(B, S, H, 1, nope + rope_d)
-    y = blockwise_attention(engine, qg, k_full, v, causal=True,
-                            n_q_chunks=n_q_chunks, shard_mode="heads")
+    if kernel_attention:
+        v_pad = jnp.concatenate(
+            [v, jnp.zeros((B, S, H, nope + rope_d - vd), v.dtype)], axis=-1)
+        y = engine.attention(q_full, k_full, v_pad,
+                             causal=True)[..., :vd]
+    else:
+        qg = q_full.reshape(B, S, H, 1, nope + rope_d)
+        y = blockwise_attention(engine, qg, k_full, v, causal=True,
+                                n_q_chunks=n_q_chunks, shard_mode="heads")
     y = y.reshape(B, S, H * vd)
     y = hints.shard(y, "dp", None, "model")
     out = engine.matmul(y, p["wo"])
@@ -339,11 +327,11 @@ def mla_decode(engine: ComputeEngine, p, x, cache, pos, cos, sin, cfg):
     (q_nope @ W_uk per head) and W_uv applied after attention, so per-step
     FLOPs are O(S·(lora+rope)·H) instead of O(S·H·(nope+vd)·lora).
 
-    Off-mesh, the absorbed attention itself dispatches the registry
-    `attention` op as multi-query attention over the latent (one shared
-    kv "head" of width lora + rope_d, values = the c_kv rows) — at deep
-    caches the op selects the split-KV decode formulation.  Under a mesh
-    the grouped-einsum form is kept so GSPMD shards the sequence axis.
+    The absorbed attention dispatches the registry `attention` op at
+    every scale, as multi-query attention over the latent (one shared kv
+    "head" of width lora + rope_d, values = the c_kv rows) — at deep
+    caches the backend selects the split-KV decode formulation, and the
+    `sharded_pallas` backend distributes it over the installed mesh.
     """
     from repro.models.common import rmsnorm
     B, C, D = x.shape
@@ -362,34 +350,23 @@ def mla_decode(engine: ComputeEngine, p, x, cache, pos, cos, sin, cfg):
     w_uk = p["w_uk"].reshape(lora, H, nope)
     q_abs = engine.einsum("bqhn,rhn->bqhr", q_nope, w_uk,
                           out_dtype=jnp.float32)
-    if not hints.mesh_active():
-        # Absorbed MLA decode IS multi-query attention over the latent:
-        # every head shares ONE kv "head" — the cache row
-        # concat(c_kv, k_rope) (lora + rope_d wide) — and the value is
-        # c_kv itself.  Route it through the registry `attention` op so
-        # the decode formulation (split-KV kernel) and autotune apply.
-        # The op requires matching K/V widths; zero-padding V's trailing
-        # rope_d columns is exact (softmax weights times zero columns)
-        # and the pad is sliced off below.
-        q_cat = jnp.concatenate(
-            [q_abs, q_rope.astype(jnp.float32)], axis=-1)   # (B,C,H,lo+ro)
-        kv_cat = jnp.concatenate([cc, cr], axis=-1)[:, :, None, :]
-        v_pad = jnp.concatenate([cc, jnp.zeros_like(cr)],
-                                axis=-1)[:, :, None, :]
-        ctx = engine.attention(
-            q_cat.astype(kv_cat.dtype), kv_cat, v_pad, causal=C > 1,
-            sm_scale=1.0 / ((nope + rope_d) ** 0.5),
-            kv_len=pos + C)[..., :lora]                     # (B, C, H, lora)
-    else:
-        s = (engine.einsum("bqhr,bsr->bhqs", q_abs, cc,
-                           out_dtype=jnp.float32)
-             + engine.einsum("bqhr,bsr->bhqs", q_rope, cr,
-                             out_dtype=jnp.float32))
-        s = s / ((nope + rope_d) ** 0.5)
-        s = _pos_mask(s, pos, 3, q_axis=2)
-        w = jax.nn.softmax(s, axis=-1)
-        ctx = engine.einsum("bhqs,bsr->bqhr", w, cc,
-                            out_dtype=jnp.float32)          # (B, C, H, lora)
+    # Absorbed MLA decode IS multi-query attention over the latent: every
+    # head shares ONE kv "head" — the cache row concat(c_kv, k_rope)
+    # (lora + rope_d wide) — and the value is c_kv itself.  Route it
+    # through the registry `attention` op so the decode formulation
+    # (split-KV kernel), autotune, and mesh distribution all apply.  The
+    # op requires matching K/V widths; zero-padding V's trailing rope_d
+    # columns is exact (softmax weights times zero columns) and the pad
+    # is sliced off below.
+    q_cat = jnp.concatenate(
+        [q_abs, q_rope.astype(jnp.float32)], axis=-1)   # (B,C,H,lo+ro)
+    kv_cat = jnp.concatenate([cc, cr], axis=-1)[:, :, None, :]
+    v_pad = jnp.concatenate([cc, jnp.zeros_like(cr)],
+                            axis=-1)[:, :, None, :]
+    ctx = engine.attention(
+        q_cat.astype(kv_cat.dtype), kv_cat, v_pad, causal=C > 1,
+        sm_scale=1.0 / ((nope + rope_d) ** 0.5),
+        kv_len=pos + C)[..., :lora]                     # (B, C, H, lora)
     w_uv = p["w_uv"].reshape(lora, H, vd)
     y = engine.einsum("bqhr,rhv->bqhv", ctx, w_uv, out_dtype=jnp.float32)
     y = y.reshape(B, C, H * vd).astype(x.dtype)

@@ -201,10 +201,12 @@ def _dense_layer(engine, cfg, lp, h, cos, sin, shard_mode, n_q_chunks,
     return h + m, jnp.zeros((), jnp.float32)
 
 
-def _mla_layer(engine, cfg, lp, h, cos, sin, n_q_chunks, use_moe):
+def _mla_layer(engine, cfg, lp, h, cos, sin, n_q_chunks, use_moe,
+               kernel_attention=True):
     a = attn.mla_forward(engine, lp["attn"],
                          norm_apply(cfg.norm, lp["norm1"], h, cfg.norm_eps),
-                         cos, sin, cfg, n_q_chunks=n_q_chunks)
+                         cos, sin, cfg, n_q_chunks=n_q_chunks,
+                         kernel_attention=kernel_attention)
     h = h + a
     x = norm_apply(cfg.norm, lp["norm2"], h, cfg.norm_eps)
     if use_moe:
@@ -307,10 +309,12 @@ def forward_hidden(engine: ComputeEngine, cfg, params, *, tokens=None,
                                      kernel_attention)
             elif kind == "mla_dense":
                 hh, a = _mla_layer(engine, cfg, lp, hh, cos, sin,
-                                   n_q_chunks, use_moe=False)
+                                   n_q_chunks, use_moe=False,
+                                   kernel_attention=kernel_attention)
             elif kind == "mla_moe":
                 hh, a = _mla_layer(engine, cfg, lp, hh, cos, sin,
-                                   n_q_chunks, use_moe=True)
+                                   n_q_chunks, use_moe=True,
+                                   kernel_attention=kernel_attention)
             elif kind == "gqa_moe":
                 hh, a = _gqa_moe_layer(engine, cfg, lp, hh, cos, sin,
                                        shard_mode, n_q_chunks,
@@ -394,7 +398,8 @@ def forward_prefill(engine: ComputeEngine, cfg, params, *, tokens=None,
             if kind in ("mla_dense", "mla_moe"):
                 a, entry = attn.mla_forward(engine, lp["attn"], x1, cos, sin,
                                             cfg, n_q_chunks=n_q_chunks,
-                                            return_cache=True)
+                                            return_cache=True,
+                                            kernel_attention=kernel_attention)
             else:
                 a, entry = attn.gqa_forward(engine, lp["attn"], x1, cos, sin,
                                             cfg, shard_mode=shard_mode,

@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.core import ComputeEngine, backends
 from repro.serve import kvcache
+from repro.sharding import hints
 from repro.serve import frontend as fe
 from repro.serve.serve_step import make_decode_step
 
@@ -42,13 +43,18 @@ class Request(fe.Request):
 class ServingEngine(fe.ServingFrontend):
     def __init__(self, cfg, params, *, engine: ComputeEngine, slots: int = 4,
                  max_len: int = 128, eos_id: int | None = None,
-                 on_overflow: str = "reject"):
+                 on_overflow: str = "reject", mesh=None):
         if on_overflow not in ("reject", "truncate"):
             raise ValueError(f"on_overflow must be 'reject' or 'truncate', "
                              f"got {on_overflow!r}")
         self.cfg, self.params = cfg, params
         self.slots, self.max_len, self.eos_id = slots, max_len, eos_id
         self.on_overflow = on_overflow
+        # Serving under a mesh: the decode step is dispatched inside
+        # `with mesh:` so a shard_map-based backend (sharded_pallas) sees
+        # the concrete mesh at trace time and shards the slot batch over
+        # the data axes.  Only the argmax'd token ids cross to host.
+        self.mesh = mesh
         self.caches = kvcache.cache_init(cfg, slots, max_len)
         self._decode = jax.jit(make_decode_step(engine, cfg))
         self.pos = np.zeros(slots, np.int32)          # next write position
@@ -119,12 +125,15 @@ class ServingEngine(fe.ServingFrontend):
             toks[s, 0] = (self._replay[s].popleft() if self._replay[s]
                           else self._last[s])
         snap = backends.dispatch_counts() if self.op_counts is None else None
-        logits, self.caches = self._decode(
-            self.params, self.caches, jnp.asarray(toks),
-            jnp.asarray(self.pos))
+        with hints.use_mesh(self.mesh):
+            logits, self.caches = self._decode(
+                self.params, self.caches, jnp.asarray(toks),
+                jnp.asarray(self.pos))
+            # argmax on device: only the (slots,) sampled token ids are
+            # gathered to host, never the (slots, vocab) logits.
+            nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1), np.int32)
         if snap is not None:
             self.op_counts = backends.counts_since(snap)
-        nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1), np.int32)
         now = time.perf_counter()
         for s, req in enumerate(self.active):
             if req is None:
@@ -158,4 +167,5 @@ class ServingEngine(fe.ServingFrontend):
             extra={"tokens": self._tokens, "slots": self.slots,
                    "max_len": self.max_len,
                    "idle_steps": self._idle_steps,
+                   "mesh": hints.mesh_topology(self.mesh),
                    "op_counts": dict(self.op_counts or {})})

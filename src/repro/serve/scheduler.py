@@ -47,6 +47,7 @@ from repro.serve import frontend as fe
 from repro.serve import kvpool
 from repro.serve.engine import Request
 from repro.serve.serve_step import make_paged_step
+from repro.sharding import hints
 
 
 @dataclasses.dataclass
@@ -77,9 +78,14 @@ class PagedServingEngine(fe.ServingFrontend):
                  max_len: int = 128, eos_id: int | None = None,
                  chunk: int = 16, prefill_budget: int = 64,
                  batch_buckets=(1, 2, 4, 8), block_buckets=None,
-                 max_wait_s: float | None = None):
+                 max_wait_s: float | None = None, mesh=None):
         self.cfg, self.params = cfg, params
         self.max_len, self.eos_id = max_len, eos_id
+        # Serving under a mesh: every paged step dispatches inside
+        # `with mesh:` so a shard_map-based backend shards the bucketed
+        # batch over the data axes; the compile cache keys on the mesh
+        # topology so traces never cross meshes.
+        self.mesh = mesh
         self.chunk = chunk
         self.prefill_budget = prefill_budget
         self.max_wait_s = max_wait_s
@@ -99,7 +105,8 @@ class PagedServingEngine(fe.ServingFrontend):
             block_buckets.append(nb_max)
         self.block_buckets = normalize_buckets(block_buckets)
         self._step_fn = StepCompileCache(make_paged_step(engine, cfg),
-                                         name="paged_step")
+                                         name="paged_step",
+                                         topology=hints.mesh_topology(mesh))
         self.active: dict[int, _Seq] = {}      # rid -> _Seq, FIFO order
         self.pending: deque[Request] = deque()
         self._outstanding = 0   # Σ (ws_blocks - held) over active seqs
@@ -190,16 +197,22 @@ class PagedServingEngine(fe.ServingFrontend):
 
     def _dispatch(self, tokens: np.ndarray, tables: np.ndarray,
                   pos: np.ndarray) -> np.ndarray:
-        """One bucketed call through the step cache; returns host logits."""
+        """One bucketed call through the step cache; returns the (B, C)
+        greedy token ids.  The argmax runs on device so only the sampled
+        tokens are gathered to host — under a mesh the (B, C, vocab)
+        logits stay sharded across the data axes and never materialize
+        host-side."""
         snap = backends.dispatch_counts() if self.op_counts is None else None
-        logits, self.pools = self._step_fn(
-            self.params, self.pools, jnp.asarray(tables),
-            jnp.asarray(tokens), jnp.asarray(pos))
+        with hints.use_mesh(self.mesh):
+            logits, self.pools = self._step_fn(
+                self.params, self.pools, jnp.asarray(tables),
+                jnp.asarray(tokens), jnp.asarray(pos))
+            toks = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         if snap is not None:
             self.op_counts = backends.counts_since(snap)
         self._step_fn.record((tokens.shape[0], tokens.shape[1],
                               tables.shape[1]))
-        return np.asarray(logits)
+        return toks
 
     def _padded_tables(self, seqs: list[_Seq], n_rows: int) -> np.ndarray:
         nb = pick_bucket(max(len(self.alloc.table(s.req.rid))
@@ -235,13 +248,13 @@ class PagedServingEngine(fe.ServingFrontend):
             tokens = np.zeros((1, self.chunk), np.int32)
             tokens[0, :c] = prompt[seq.kv_len:seq.kv_len + c]
             tables = self._padded_tables([seq], 1)
-            logits = self._dispatch(tokens, tables,
-                                    np.asarray([seq.kv_len], np.int32))
+            toks_out = self._dispatch(tokens, tables,
+                                      np.asarray([seq.kv_len], np.int32))
             seq.kv_len += c
             budget -= c
             worked.add(seq.req.rid)
-            if not seq.prefilling:   # last chunk: its logits hold token #1
-                self._finish_token(seq, int(np.argmax(logits[0, c - 1])),
+            if not seq.prefilling:   # last chunk's logits hold token #1
+                self._finish_token(seq, int(toks_out[0, c - 1]),
                                    time.perf_counter())
 
     def _decode(self, worked: set) -> None:
@@ -259,12 +272,12 @@ class PagedServingEngine(fe.ServingFrontend):
                 tokens[j, 0] = s.last
                 pos[j] = s.kv_len
             tables = self._padded_tables(group, bb)
-            logits = self._dispatch(tokens, tables, pos)
+            toks_out = self._dispatch(tokens, tables, pos)
             now = time.perf_counter()
             for j, s in enumerate(group):
                 s.kv_len += 1
                 worked.add(s.req.rid)
-                self._finish_token(s, int(np.argmax(logits[j, 0])), now)
+                self._finish_token(s, int(toks_out[j, 0]), now)
 
     # --------------------------------------------------------------- step
 

@@ -15,10 +15,12 @@ from repro.models.common import lm_head_logits
 
 def make_prefill_step(engine: ComputeEngine, cfg, *, n_q_chunks: int = 8,
                       kernel_attention: bool = True):
-    """Prefill through the grouped attention path: off-mesh, GQA layers
-    dispatch the registry `attention` op with the compact (B, S, KV, hd)
-    K/V — the same layout the caches (serve/kvcache.py) store, so no
-    H-broadcast exists anywhere between projection and cache.
+    """Prefill through the grouped attention path: GQA layers dispatch
+    the registry `attention` op at every scale with the compact
+    (B, S, KV, hd) K/V — the same layout the caches (serve/kvcache.py)
+    store, so no H-broadcast exists anywhere between projection and
+    cache.  Distribution lives in the backend: under a mesh, the
+    sharded_pallas backend runs the same kernels per-shard via shard_map.
     ``kernel_attention=False`` forces the blockwise jnp formulation (the
     A/B baseline; the op path is differentiable too, via the flash
     kernel's custom VJP)."""
@@ -54,11 +56,13 @@ def make_forward_step(engine: ComputeEngine, cfg, *, n_q_chunks: int = 8,
 def make_decode_step(engine: ComputeEngine, cfg):
     """One-token decode against the slot engine's fixed cache buffers.
 
-    Off-mesh the attention dispatch rides the registry `attention` op;
-    on the pallas backend a decode-shaped dispatch (Sq <= 8 against a
-    cache buffer >= 256 rows) selects the split-KV flash-decoding
-    formulation (kernels/flash_decode.py) — same contract, tiles under
-    the lazy "attention_decode" autotune key."""
+    The attention dispatch rides the registry `attention` op at every
+    scale; on the pallas backend a decode-shaped dispatch (Sq <= 8
+    against a cache buffer >= 256 rows) selects the split-KV
+    flash-decoding formulation (kernels/flash_decode.py) — same
+    contract, tiles under the lazy "attention_decode" autotune key.
+    Under a mesh the sharded_pallas backend shards the slot batch (and
+    KV-head groups) via shard_map around those same kernels."""
     def decode_step(params, caches, token, pos):
         h, new_caches = tfm.decode_hidden(engine, cfg, params, caches,
                                           token, pos)

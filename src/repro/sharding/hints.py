@@ -46,6 +46,21 @@ def batch_axes() -> tuple:
             else ("pod", "data"))
 
 
+def physical_mesh():
+    """The installed CONCRETE device mesh (``with mesh:`` /
+    `launch.mesh.set_mesh`), or None off-mesh.  Unlike the abstract mesh an
+    allocation-free trace installs, the physical mesh carries real devices —
+    it is the mesh `shard_map`-based backends (core/shard_backend.py,
+    kernels/sharded.py) wrap kernels over."""
+    try:
+        phys = jax.interpreters.pxla.thread_resources.env.physical_mesh
+    except Exception:  # pragma: no cover - pxla internals moved
+        return None
+    if phys is None or getattr(phys, "empty", True):
+        return None
+    return phys
+
+
 def _current_axis_names():
     try:
         mesh = jax.sharding.get_abstract_mesh()
@@ -53,20 +68,36 @@ def _current_axis_names():
         mesh = None
     if mesh is not None and not getattr(mesh, "empty", False):
         return tuple(mesh.axis_names)
-    try:
-        phys = jax.interpreters.pxla.thread_resources.env.physical_mesh
-    except Exception:  # pragma: no cover
-        return ()
-    if phys is None or getattr(phys, "empty", True):
-        return ()
-    return tuple(phys.axis_names)
+    phys = physical_mesh()
+    return tuple(phys.axis_names) if phys is not None else ()
 
 
 def mesh_active() -> bool:
-    """True when a device mesh is installed (sharding hints will apply);
-    model code uses this to pick between the GSPMD-shardable formulation
-    and the single-device kernel-backed registry op."""
+    """True when a device mesh is installed (sharding hints will apply).
+    Model code no longer forks on this — attention/GEMM dispatch the
+    registry op at every scale and the BACKEND distributes (see
+    core/shard_backend.py); it remains for launchers/diagnostics."""
     return bool(_current_axis_names())
+
+
+def mesh_topology(mesh=None) -> tuple:
+    """((axis, size), ...) for `mesh` (default: the installed physical
+    mesh), or () off-mesh.  A hashable topology fingerprint — serving
+    layers fold it into `StepCompileCache` keys so a step traced under
+    one mesh is never replayed under another."""
+    if mesh is None:
+        mesh = physical_mesh()
+    if mesh is None or getattr(mesh, "empty", False):
+        return ()
+    return tuple((str(a), int(mesh.shape[a])) for a in mesh.axis_names)
+
+
+def use_mesh(mesh):
+    """Context manager installing `mesh` as the ambient physical mesh for
+    the duration (trace-time is what matters: shard_map embeds the
+    concrete mesh into the jaxpr).  None -> no-op context, so callers can
+    write ``with use_mesh(self.mesh):`` unconditionally."""
+    return contextlib.nullcontext() if mesh is None else mesh
 
 
 def resolve(tag):

@@ -5,9 +5,33 @@ kernels/ref.py — through the PUBLIC registry API.  This is deliberately
 done here and not in library code: it exercises exactly the path a
 downstream backend author uses (see docs/engine_api.md), and it keeps the
 shipped registry to the two real execution targets.
+
+Also provides the `eight_devices` session guard for multi-device tests:
+XLA's host-platform device count can only be forced BEFORE jax
+initializes, so tests must not set `os.environ["XLA_FLAGS"]` themselves
+(whether that takes depends on collection order).  Run the suite under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``; when the flag
+didn't take, guarded tests skip with the reason instead of silently
+exercising the single-device fallback.
 """
+import jax
+import pytest
+
 from repro.core import backends, register_backend
 from repro.kernels import ref
+
+
+@pytest.fixture(scope="session")
+def eight_devices():
+    """Skips unless jax sees >= 8 devices (flag must be in the environment
+    that launched pytest); returns the first 8."""
+    n = jax.device_count()
+    if n < 8:
+        pytest.skip(
+            f"needs >= 8 devices, found {n}: run pytest under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+            f"(must be set before jax initializes)")
+    return jax.devices()[:8]
 
 
 def _ref_matmul(x, w, scale, shift, *, act, out_dtype, ctx):

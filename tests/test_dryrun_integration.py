@@ -1,6 +1,14 @@
 """Dry-run integration: one fast cell compiles end-to-end on the production
-mesh in a subprocess (the XLA host-device-count flag must be set before jax
-init, so this cannot run in the main pytest process)."""
+mesh in a subprocess.
+
+The XLA host-device-count flag must be set before jax initializes, so it is
+passed through the subprocess ENVIRONMENT (not `os.environ` at module import
+time, which only takes effect if this module happens to import before
+anything else touches jax — collection-order roulette).  The script still
+guards the count after jax init and reports SKIP when the flag didn't take
+(e.g. a platform where XLA ignores it), which surfaces as a pytest skip
+with the reason instead of a silent pass against the wrong mesh.
+"""
 import json
 import os
 import subprocess
@@ -11,9 +19,12 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 import json
+import jax
+if jax.device_count() < 512:
+    print("SKIP device count didn't take: found %d, need 512"
+          % jax.device_count())
+    raise SystemExit(0)
 from repro.launch.dryrun import lower_cell
 rec = lower_cell("qwen2-0.5b", "decode_32k")
 print("JSON" + json.dumps({k: rec[k] for k in
@@ -23,13 +34,27 @@ print("JSON" + json.dumps({"status": rec2["status"], "chips": rec2["chips"]}))
 """
 
 
+def run_with_devices(script: str, n_devices: int, *, timeout: int = 900):
+    """Run `script` in a fresh interpreter with the XLA host-platform
+    device count forced via the environment (the only placement that is
+    immune to import order).  Skips the calling test when the script
+    reports the count didn't take."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src"),
+               XLA_FLAGS=f"--xla_force_host_platform_device_count"
+                         f"={n_devices}")
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    for line in out.stdout.splitlines():
+        if line.startswith("SKIP"):
+            pytest.skip(line[5:].strip())
+    return out
+
+
 @pytest.mark.slow
 def test_dryrun_cell_single_and_multi_pod():
-    env = dict(os.environ,
-               PYTHONPATH=os.path.join(REPO, "src"))
-    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
-                         capture_output=True, text=True, timeout=900)
-    assert out.returncode == 0, out.stderr[-3000:]
+    out = run_with_devices(SCRIPT, 512)
     recs = [json.loads(l[4:]) for l in out.stdout.splitlines()
             if l.startswith("JSON")]
     assert len(recs) == 2

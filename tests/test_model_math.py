@@ -184,10 +184,11 @@ def test_mla_forward_prefill_crosses_kv_chunk_boundary():
                                rtol=5e-4, atol=5e-4)
 
 
-def test_gqa_prefill_routes_through_registry_attention_off_mesh():
-    """Single-device prefill dispatches the registry `attention` op; with a
-    mesh installed the GSPMD blockwise formulation engages instead — and the
-    two paths agree numerically."""
+def test_gqa_prefill_routes_through_registry_attention_at_every_scale():
+    """Prefill dispatches the registry `attention` op UNCONDITIONALLY —
+    with or without a mesh installed (distribution is the backend's job,
+    not the model's); ``kernel_attention=False`` is the only way to the
+    blockwise oracle, and the two formulations agree numerically."""
     cfg = reduced(get_arch("qwen2-0.5b"))
     p = gqa_init(jax.random.PRNGKey(0), cfg)
     B, S = 2, 32
@@ -205,8 +206,15 @@ def test_gqa_prefill_routes_through_registry_attention_off_mesh():
         snap = backends.dispatch_counts()
         y_on = gqa_forward(ENGINE, p, x, cos, sin, cfg)
         on_counts = backends.counts_since(snap)
-    assert ("xla", "attention") not in on_counts   # blockwise path
+    assert on_counts.get(("xla", "attention")) == 1   # same op path on-mesh
     np.testing.assert_allclose(np.asarray(y_off), np.asarray(y_on),
+                               rtol=2e-4, atol=2e-4)
+
+    snap = backends.dispatch_counts()
+    y_bw = gqa_forward(ENGINE, p, x, cos, sin, cfg, kernel_attention=False)
+    bw_counts = backends.counts_since(snap)
+    assert ("xla", "attention") not in bw_counts      # the A/B oracle
+    np.testing.assert_allclose(np.asarray(y_off), np.asarray(y_bw),
                                rtol=2e-4, atol=2e-4)
 
 
